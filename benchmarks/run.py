@@ -1,0 +1,289 @@
+"""Benchmark harness — one function per paper table/figure + kernel/system
+micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV rows (deliverable
+d).  ``derived`` carries the benchmark's headline quantity (power reduction,
+cluster count, rel-error, ...).
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableII] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+
+def _time_us(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
+    out = fn()                     # warmup + result
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn()
+    dt = (time.perf_counter() - t0) / repeats
+    return dt * 1e6, out
+
+
+def bench_tableII(fast: bool) -> List[Tuple[str, float, str]]:
+    """Paper Table II: dynamic power, 3 array sizes x 4 techs, model vs paper."""
+    from repro.core import validate_against_table2
+    rows = []
+    us, table = _time_us(lambda: validate_against_table2())
+    worst = max(abs(r["delta_pp"]) for r in table)
+    rows.append(("tableII/all15rows", us, f"max|delta|={worst:.2f}pp"))
+    for r in table[:3]:
+        rows.append((f"tableII/{r['tech']}_{r['array']}x{r['array']}", us / 15,
+                     f"model={r['model_reduction_pct']:.2f}%"
+                     f"_paper={r['paper_reduction_pct']:.2f}%"))
+    return rows
+
+
+def bench_fig15_16(fast: bool) -> List[Tuple[str, float, str]]:
+    """Figs. 15/16: 64x64 variant sweep per tech.
+
+    Variant voltage ranges follow the paper: 0.5-1.2 V for 22/45 nm,
+    0.7-1.3 V for 130 nm (its threshold is 0.7 V).  The paper's minimum-power
+    variants (2x(32x64){0.5,0.6} resp. {0.7,0.8}) must win.  NOTE: the
+    paper's quoted 18/21/39% spreads are inconsistent with its own Table II
+    reductions under any single P(V) law; our model is calibrated to Table II
+    and reports the spread that calibration implies (EXPERIMENTS.md
+    §Paper-validation)."""
+    from repro.core import model_for
+    v_2245 = {
+        "2x(32x64){0.5,0.6}": ([0.5, 0.6], [0.5, 0.5]),
+        "4x(32x32){0.5,0.6,0.7,0.8}": ([0.5, 0.6, 0.7, 0.8], None),
+        "4x(32x32){0.8,1.0,1.2,1.2}": ([0.8, 1.0, 1.2, 1.2], None),
+        "2x(32x64){1.0,1.2}": ([1.0, 1.2], [0.5, 0.5]),
+    }
+    v_130 = {
+        "2x(32x64){0.7,0.8}": ([0.7, 0.8], [0.5, 0.5]),
+        "4x(32x32){0.7,0.9,1.1,1.3}": ([0.7, 0.9, 1.1, 1.3], None),
+        "4x(32x32){0.8,1.0,1.2,1.3}": ([0.8, 1.0, 1.2, 1.3], None),
+        "2x(32x64){1.1,1.3}": ([1.1, 1.3], [0.5, 0.5]),
+    }
+    out = []
+    for tech, variants, paper_best in (
+            ("vtr-22nm", v_2245, "2x(32x64){0.5,0.6}"),
+            ("vtr-45nm", v_2245, "2x(32x64){0.5,0.6}"),
+            ("vtr-130nm", v_130, "2x(32x64){0.7,0.8}")):
+        m = model_for(tech)
+
+        def sweep():
+            return {k: m.partitioned_mw(64, v, frac)
+                    for k, (v, frac) in variants.items()}
+
+        us, powers = _time_us(sweep)
+        spread = (max(powers.values()) - min(powers.values())) \
+            / max(powers.values())
+        best = min(powers, key=powers.get)
+        out.append((f"fig15_16/{tech}", us,
+                    f"spread={spread:.1%}_best={best}"
+                    f"_paperbest_match={best == paper_best}"))
+    return out
+
+
+def bench_clustering(fast: bool) -> List[Tuple[str, float, str]]:
+    """Figs. 10-14: the four algorithms on 16x16..64x64 min-slack data."""
+    from repro.core import (TimingModel, dbscan, hierarchical, kmeans,
+                            meanshift)
+    sizes = [16, 32] if fast else [16, 32, 64]
+    out = []
+    for n in sizes:
+        slack = TimingModel(n=n, seed=2021).min_slack_flat()
+        spread = slack.max() - slack.min()
+        algos = {
+            "kmeans": lambda: kmeans(slack, 4, seed=0),
+            "hierarchical": lambda: hierarchical(slack, 4),
+            "meanshift": lambda: meanshift(slack, bandwidth=0.17 * spread),
+            "dbscan": lambda: dbscan(slack, eps=spread / 12,
+                                     min_pts=max(4, len(slack) // 64)),
+        }
+        if n == 64:
+            algos.pop("hierarchical")      # O(n^3): minutes at 4096 points
+        for name, fn in algos.items():
+            us, labels = _time_us(fn, repeats=1)
+            k = len(set(labels.tolist()) - {-1})
+            out.append((f"clustering/{name}_{n}x{n}", us, f"clusters={k}"))
+    return out
+
+
+def bench_cadflow(fast: bool) -> List[Tuple[str, float, str]]:
+    """End-to-end flow (Fig. 9) incl. Razor-runtime calibration."""
+    from repro.core import run_flow
+    out = []
+    for tech in ("vivado-28nm", "vtr-22nm"):
+        us, rep = _time_us(lambda t=tech: run_flow(16, t, "dbscan",
+                                                   seed=2021), repeats=1)
+        out.append((f"cadflow/16x16_{tech}", us,
+                    f"static={rep.static_reduction_pct:.2f}%"
+                    f"_runtime={rep.runtime_reduction_pct:.2f}%"))
+    return out
+
+
+def bench_systolic_sim(fast: bool) -> List[Tuple[str, float, str]]:
+    """Cycle-level fault-injection simulator throughput."""
+    from repro.core import (RazorConfig, SystolicSim, TimingModel, TECH_NODES,
+                            quadrant_floorplan)
+    tm = TimingModel(n=16, tech=TECH_NODES["vtr-22nm"], seed=2021)
+    fp = quadrant_floorplan(16).with_voltages([0.9, 0.9, 1.0, 1.0])
+    sim = SystolicSim(tm, fp, RazorConfig())
+    rng = np.random.default_rng(0)
+    a, w = rng.normal(size=(64, 16)), rng.normal(size=(16, 16))
+    us, (c, stats) = _time_us(lambda: sim.matmul(a, w), repeats=1)
+    return [("systolic_sim/16x16_m64", us,
+             f"rel_err={stats.rel_error:.2e}_replays={stats.replay_cycles}")]
+
+
+def bench_kernels(fast: bool) -> List[Tuple[str, float, str]]:
+    """Pallas kernels in interpret mode vs their oracles (correctness +
+    wall time; interpret-mode numbers are NOT TPU performance)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.ops import (precision_mm, razor_mm, ssd_op,
+                                   systolic_matmul, wkv6_op)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(k1, (256, 256), jnp.bfloat16)
+    b = jax.random.normal(k2, (256, 256), jnp.bfloat16)
+    vmap_ = jnp.full((2, 2), 0.9)
+    vsafe = jnp.asarray([[0.8, 1.0], [0.8, 0.8]])
+    out = []
+
+    us, (c, flags) = _time_us(
+        lambda: jax.block_until_ready(systolic_matmul(a, b, vmap_, vsafe)))
+    c_ref, f_ref = ref.systolic_mac(a, b, vmap_, vsafe)
+    out.append(("kernels/systolic_mac_256", us,
+                f"flags_match={bool((np.array(flags) == np.array(f_ref)).all())}"))
+
+    us, (c, fl, rel) = _time_us(
+        lambda: jax.block_until_ready(razor_mm(a, b)))
+    out.append(("kernels/razor_matmul_256", us,
+                f"max_tile_rel={float(np.array(rel).max()):.3f}"))
+
+    tiers = jnp.asarray([[0, 1], [2, 0]], jnp.int32)
+    us, c = _time_us(lambda: jax.block_until_ready(precision_mm(a, b, tiers)))
+    out.append(("kernels/precision_island_256", us, "tiers=int4/int8/f32"))
+
+    bs, s, h, p = 1, 128, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r_, k_, v_ = (jax.random.normal(ks[i], (bs, s, h, p)) for i in range(3))
+    w_log = -jnp.exp(jax.random.normal(ks[3], (bs, s, h, p)) * 0.5)
+    u = jax.random.normal(ks[4], (h, p)) * 0.1
+    s0 = jnp.zeros((bs, h, p, p))
+    us, (y, _) = _time_us(
+        lambda: jax.block_until_ready(wkv6_op(r_, k_, v_, w_log, u, s0,
+                                              chunk=32)))
+    y_ref, _ = ref.wkv6(r_, k_, v_, w_log, u, s0)
+    err = float(jnp.abs(y - y_ref).max())
+    out.append(("kernels/wkv6_b1s128", us, f"max_err_vs_ref={err:.2e}"))
+
+    n = 8
+    x = jax.random.normal(ks[0], (bs, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, s, h)))
+    A_log = jax.random.normal(ks[2], (h,)) * 0.3
+    B = jax.random.normal(ks[3], (bs, s, n))
+    C = jax.random.normal(ks[4], (bs, s, n))
+    D = jnp.ones((h,))
+    st = jnp.zeros((bs, h, n, p))
+    us, (y, _) = _time_us(
+        lambda: jax.block_until_ready(ssd_op(x, dt, A_log, B, C, D, st,
+                                             chunk=32)))
+    y_ref, _ = ref.ssd(x, dt, A_log, B, C, D, st)
+    err = float(jnp.abs(y - y_ref).max())
+    out.append(("kernels/ssd_chunk_b1s128", us, f"max_err_vs_ref={err:.2e}"))
+    return out
+
+
+def bench_power_report(fast: bool) -> List[Tuple[str, float, str]]:
+    """Paper power model applied to three dry-run cells' MAC counts."""
+    from repro.roofline.power_report import power_row
+    out = []
+    cells = [("qwen1.5-110b", "train_4k"), ("rwkv6-1.6b", "decode_32k"),
+             ("llama4-scout-17b-a16e", "prefill_32k")]
+    for arch, shape in cells:
+        us, row = _time_us(lambda a=arch, s=shape: power_row(a, s), repeats=1)
+        out.append((f"power_report/{arch}_{shape}", us,
+                    f"runtime_saving={row.runtime_saving_pct:.1f}%"
+                    f"_precision={row.precision_saving_pct:.1f}%"))
+    return out
+
+
+def bench_serve(fast: bool) -> List[Tuple[str, float, str]]:
+    """Smoke-model serving throughput (CPU)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import model_api
+    from repro.serve import Request, ServeEngine
+    cfg = get_config("starcoder2-3b", smoke=True)
+    params = model_api(cfg).init_params(jax.random.PRNGKey(0))
+
+    def serve():
+        eng = ServeEngine(cfg, params, slots=2, max_len=48)
+        for uid in range(4):
+            eng.submit(Request(uid=uid, prompt=[3, 4, 5], max_new_tokens=4))
+        return eng.run_until_drained()
+
+    us, stats = _time_us(serve, repeats=1)
+    return [("serve/smoke_4req", us,
+             f"tok_per_s={stats.tokens_generated / (us / 1e6):.1f}")]
+
+
+def bench_accuracy_voltage(fast: bool) -> List[Tuple[str, float, str]]:
+    """BEYOND PAPER: the paper's stated future work (ii) — the trade-off
+    between DNN accuracy (timing-failure corruption) and power as voltage
+    drops through the critical region, measured on the fault-injecting
+    systolic simulator (16x16, vtr-22nm)."""
+    from repro.core import (RazorConfig, SystolicSim, TimingModel, TECH_NODES,
+                            model_for, quadrant_floorplan)
+    tm = TimingModel(n=16, tech=TECH_NODES["vtr-22nm"], seed=2021)
+    pm = model_for("vtr-22nm")
+    rng = np.random.default_rng(0)
+    a, w = rng.normal(size=(48, 16)), rng.normal(size=(16, 16))
+    out = []
+    vmax = float(tm.min_safe_voltage().max())
+    for v in (1.0, round(vmax + 0.02, 3), round(vmax - 0.01, 3),
+              round(vmax - 0.05, 3), 0.6):
+        fp = quadrant_floorplan(16).with_voltages([v] * 4)
+        sim = SystolicSim(tm, fp, RazorConfig())
+
+        def run(sim=sim):
+            return sim.matmul(a, w)
+
+        us, (c, stats) = _time_us(run, repeats=1)
+        power = pm.partitioned_mw(16, [v] * 4, v_ref=1.0)
+        out.append((f"accuracy_voltage/v{v}", us,
+                    f"rel_err={stats.rel_error:.2e}"
+                    f"_replays={stats.replay_cycles}"
+                    f"_silent={int(stats.silent.sum())}"
+                    f"_power={power:.0f}mW"))
+    return out
+
+
+BENCHES: Dict[str, Callable] = {
+    "tableII": bench_tableII,
+    "fig15_16": bench_fig15_16,
+    "clustering": bench_clustering,
+    "cadflow": bench_cadflow,
+    "systolic_sim": bench_systolic_sim,
+    "kernels": bench_kernels,
+    "power_report": bench_power_report,
+    "serve": bench_serve,
+    "accuracy_voltage": bench_accuracy_voltage,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=sorted(BENCHES), default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        for row_name, us, derived in BENCHES[name](args.fast):
+            print(f"{row_name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: voltage-scaled partitioned DNN accelerators (Paul et al., 2021)
+reproduced + generalized as a multi-pod JAX training/serving framework."""
+
+__version__ = "1.0.0"

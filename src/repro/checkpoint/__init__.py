@@ -1,0 +1,2 @@
+"""Sharded, async, elastically-reshardable checkpoints."""
+from .manager import CheckpointManager

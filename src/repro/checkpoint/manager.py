@@ -1,0 +1,178 @@
+"""Sharded checkpointing with async writes, atomic publication and elastic
+resharding (DESIGN.md Sec. 7).
+
+Layout:  <dir>/step_<n>/manifest.json + shard_<host>.npz
+The manifest records the pytree structure, per-leaf global shape/dtype and
+the writing mesh, so a restore may target a *different* mesh/host count —
+leaves are reassembled from shards and re-split for the new topology.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+Pytree = Any
+
+_SEP = "/"
+
+# npz cannot serialize ml_dtypes (bfloat16, fp8): store raw bit views and
+# reinterpret on restore using the manifest's logical dtype.
+_BITCAST = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+            "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+            "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2)}
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    name = str(arr.dtype)
+    if name in _BITCAST:
+        return arr.view(_BITCAST[name][0])
+    return arr
+
+
+def _decode(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
+    if logical_dtype in _BITCAST:
+        return arr.view(_BITCAST[logical_dtype][1])
+    return arr.astype(logical_dtype)
+
+
+def _flatten_with_names(tree: Pytree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def _unflatten_like(template: Pytree, named: Dict[str, np.ndarray]) -> Pytree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        name = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path)
+        arr = named[name]
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Host-sharded npz checkpoints.
+
+    ``num_hosts``/``host_id`` simulate the multi-host layout on CPU: each
+    host writes the rows of every leaf's leading axis it owns (leaves whose
+    leading dim doesn't divide are written whole by host 0).
+    """
+
+    def __init__(self, directory: str | Path, host_id: int = 0,
+                 num_hosts: int = 1, keep: int = 3):
+        self.dir = Path(directory)
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.keep = keep
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+
+    # -- helpers -----------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def _owned_slice(self, arr: np.ndarray, host: int) -> np.ndarray:
+        n = arr.shape[0] if arr.ndim else 0
+        if arr.ndim == 0 or n % self.num_hosts:
+            return arr if host == 0 else arr[:0] if arr.ndim else arr
+        per = n // self.num_hosts
+        return arr[host * per:(host + 1) * per]
+
+    # -- save --------------------------------------------------------------------
+
+    def save(self, step: int, tree: Pytree, blocking: bool = True) -> Path:
+        named = [(k, np.asarray(v)) for k, v in _flatten_with_names(tree)]
+        tmp = self.dir / f".tmp_step_{step:08d}_{self.host_id}"
+        final = self._step_dir(step)
+
+        def _write() -> None:
+            tmp.mkdir(parents=True, exist_ok=True)
+            shard = {k: _encode(self._owned_slice(v, self.host_id))
+                     for k, v in named}
+            np.savez(tmp / f"shard_{self.host_id}.npz", **shard)
+            if self.host_id == 0:
+                manifest = {
+                    "step": step,
+                    "num_hosts": self.num_hosts,
+                    "leaves": {k: {"shape": list(v.shape),
+                                   "dtype": str(v.dtype)} for k, v in named},
+                }
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+            # atomic publication: rename once the shard is complete
+            final.mkdir(parents=True, exist_ok=True)
+            for f in tmp.iterdir():
+                os.replace(f, final / f.name)
+            shutil.rmtree(tmp, ignore_errors=True)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self.wait()
+            self._async_thread = threading.Thread(target=_write, daemon=True)
+            self._async_thread.start()
+        return final
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Pytree, step: Optional[int] = None) -> Pytree:
+        """Reassemble the full tree from however many shards were written
+        (elastic: the reading topology is independent of the writing one)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        shards = [np.load(d / f"shard_{h}.npz")
+                  for h in range(manifest["num_hosts"])]
+        named: Dict[str, np.ndarray] = {}
+        for key, meta in manifest["leaves"].items():
+            parts = [s[key] for s in shards]
+            parts = [p for p in parts if p.size or p.ndim == 0]
+            if len(parts) == 1 or parts[0].ndim == 0:
+                arr = parts[0]
+            else:
+                arr = np.concatenate(parts, axis=0)
+            arr = _decode(arr, meta["dtype"])
+            expect = tuple(meta["shape"])
+            if arr.shape != expect:
+                raise ValueError(f"{key}: restored {arr.shape} != {expect}")
+            named[key] = arr
+        return _unflatten_like(template, named)

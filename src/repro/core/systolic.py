@@ -1,0 +1,149 @@
+"""Functional weight-stationary systolic-array simulator with voltage-dependent
+timing-fault injection (paper Secs. II-E, III-B, V-B).
+
+Computes C = A @ W on an N x N MAC grid.  MAC (i, j) multiplies the streamed
+activation A[m, i] with the resident weight W[i, j] and adds the partial sum
+flowing down from row i-1.  Each MAC runs at the voltage of its floorplan
+partition; its effective path arrival time (data-dependent, Sec. II-E) is
+classified by the Razor model into OK / DETECTED (flag + corrected, one replay
+cycle) / SILENT (stale register value leaks through and propagates — the crash
+region).
+
+The simulator returns both the (possibly corrupted) product and per-partition
+Razor statistics; the runtime scheme (Algorithm 2) calibrates voltages against
+``trial_run``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .partition import Floorplan
+from .razor import (DETECTED, OK, SILENT, RazorConfig, classify_arrival,
+                    effective_arrival, switching_activity)
+from .timing import TimingModel
+
+
+@dataclasses.dataclass
+class SimStats:
+    detected: np.ndarray            # (n, n) replay counts per MAC
+    silent: np.ndarray              # (n, n) silent-failure counts per MAC
+    partition_fail: np.ndarray      # (P,) OR of detected flags per partition
+    replay_cycles: int
+    rel_error: float                # ||C_sim - C_true|| / ||C_true||
+
+    def partition_detected(self, partition_of_mac: np.ndarray) -> np.ndarray:
+        det = self.detected.reshape(-1) > 0
+        n_part = int(partition_of_mac.max()) + 1
+        return np.array([det[partition_of_mac == p].any() for p in range(n_part)])
+
+
+@dataclasses.dataclass
+class SystolicSim:
+    timing: TimingModel
+    floorplan: Floorplan
+    razor: RazorConfig = dataclasses.field(default_factory=RazorConfig)
+    quant_bits: int = 16            # operand width for switching activity
+
+    def _arrival(self, v_map: np.ndarray, activity_m: np.ndarray) -> np.ndarray:
+        """(M, n, n) effective arrival times: per-MAC nominal delay at its rail
+        voltage, scaled by the per-cycle activation switching activity."""
+        d = self.timing.delays_at(v_map)                      # (n, n)
+        return effective_arrival(d[None, :, :],
+                                 activity_m[:, :, None], self.razor)
+
+    def _activity(self, a: np.ndarray) -> np.ndarray:
+        """(M, n) per-cycle input toggle fraction on each row's activation bus."""
+        scale = np.max(np.abs(a)) or 1.0
+        q = np.clip((a / scale) * (2 ** (self.quant_bits - 1) - 1),
+                    -(2 ** (self.quant_bits - 1)), 2 ** (self.quant_bits - 1) - 1
+                    ).astype(np.int64)
+        prev = np.vstack([q[:1], q[:-1]])
+        return switching_activity(prev, q, self.quant_bits)
+
+    def matmul(self, a: np.ndarray, w: np.ndarray,
+               v_map: Optional[np.ndarray] = None) -> Tuple[np.ndarray, SimStats]:
+        """Simulate C = a @ w with fault injection.
+
+        a: (M, n) activations; w: (n, n) resident weights.
+        """
+        n = self.timing.n
+        if a.shape[1] != n or w.shape != (n, n):
+            raise ValueError(f"expected a:(M,{n}) w:({n},{n})")
+        v_map = self.floorplan.voltage_map() if v_map is None else v_map
+        m_rows = a.shape[0]
+        act = self._activity(a)                               # (M, n)
+        arrival = self._arrival(v_map, act)                   # (M, n, n)
+        status = classify_arrival(arrival, self.razor)        # (M, n, n)
+
+        c_true = a @ w
+        psum = np.zeros((m_rows, n), dtype=np.float64)
+        out_prev_rows = psum
+        detected = np.zeros((n, n), dtype=np.int64)
+        silent = np.zeros((n, n), dtype=np.int64)
+        for i in range(n):
+            term = a[:, i:i + 1] * w[i, :][None, :]           # (M, n)
+            out = out_prev_rows + term
+            st = status[:, i, :]                              # (M, n)
+            detected[i] += (st == DETECTED).sum(axis=0)
+            sil = st == SILENT
+            silent[i] += sil.sum(axis=0)
+            if sil.any():
+                # stale register: MAC (i, j) re-emits its previous-cycle output
+                for mi, j in zip(*np.nonzero(sil)):
+                    out[mi, j] = out[mi - 1, j] if mi > 0 else 0.0
+            out_prev_rows = out
+        c_sim = out_prev_rows
+
+        part = self.floorplan.partition_of_mac()
+        det_flags = np.array([
+            (detected.reshape(-1)[part == p] > 0).any()
+            for p in range(int(part.max()) + 1)])
+        denom = float(np.linalg.norm(c_true)) or 1.0
+        stats = SimStats(
+            detected=detected, silent=silent, partition_fail=det_flags,
+            replay_cycles=int(detected.sum()),
+            rel_error=float(np.linalg.norm(c_sim - c_true)) / denom,
+        )
+        return c_sim, stats
+
+    # -- runtime-scheme hook ---------------------------------------------------------
+
+    def trial_run(self, partition_v: np.ndarray, seed: int = 0,
+                  m_rows: int = 32, fail_on_silent: bool = True) -> np.ndarray:
+        """One Algorithm-2 trial: random traffic at the given partition
+        voltages; returns per-partition timing_fail flags.
+
+        Razor can only *see* DETECTED errors; SILENT ones are invisible to the
+        runtime scheme (crash region).  ``fail_on_silent=True`` folds them in
+        only to let tests assert what an oracle would see.
+        """
+        rng = np.random.default_rng(seed)
+        n = self.timing.n
+        fp = self.floorplan.with_voltages(partition_v)
+        v_map = fp.voltage_map()
+        a = rng.normal(size=(m_rows, n))
+        w = rng.normal(size=(n, n))
+        _, stats = self.matmul(a, w, v_map=v_map)
+        flags = stats.partition_fail.copy()
+        if fail_on_silent:
+            part = fp.partition_of_mac()
+            sil = stats.silent.reshape(-1) > 0
+            for p in range(len(flags)):
+                flags[p] |= bool(sil[part == p].any())
+        return flags
+
+
+def fast_fault_matmul(a: np.ndarray, w: np.ndarray, fail_mask: np.ndarray,
+                      mode: str = "drop") -> np.ndarray:
+    """Vectorized large-array approximation: rank-1 terms of failing MACs are
+    dropped ("drop") or halved ("attenuate").  Used for big sweeps where the
+    cycle-level simulator is unnecessary."""
+    n = w.shape[0]
+    keep = (~fail_mask).astype(a.dtype) if mode == "drop" else (
+        1.0 - 0.5 * fail_mask.astype(a.dtype))
+    # C[m, j] = sum_i a[m, i] * w[i, j] * keep[i, j]
+    return np.einsum("mi,ij->mj", a, w * keep)

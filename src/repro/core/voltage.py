@@ -1,0 +1,123 @@
+"""Static and runtime voltage-scaling schemes (paper Sec. III, Algorithms 1-2).
+
+Algorithm 1 (static): split the critical range [V_crash, V_min] into n bands,
+partition i gets the band midpoint (ascending).  The paper's n=4 Artix-7
+example [0.95, 1.00] yields 0.95625/0.96875/0.98125/0.99375 — printed in the
+paper (rounded) as 0.96/0.97/0.98/0.99.
+
+Algorithm 2 (runtime): per trial run, a partition whose Razor flag fired steps
+its V_ccint up by V_s, otherwise down by V_s.  We add the convergence wrapper
+("trial run" loop of Sec. III-B): anneal until every partition oscillates
+around its lowest safe voltage, then lock the upper rail of the oscillation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+
+def static_voltage_scaling(v_min: float, v_crash: float, n: int) -> np.ndarray:
+    """Algorithm 1, verbatim. Returns ascending V_ccint_i (partition 0 lowest).
+
+    V_s = (V_min - V_crash) / n ; V_ccint_i = midpoint of band i.
+    """
+    if n <= 0:
+        raise ValueError("need at least one partition")
+    if v_min <= v_crash:
+        raise ValueError("V_min must exceed V_crash")
+    v_s = (v_min - v_crash) / n
+    v_l = v_crash
+    out = []
+    for _ in range(n):
+        out.append((v_l + v_l + v_s) / 2.0)
+        v_l += v_s
+    return np.asarray(out)
+
+
+def assign_partition_voltages(cluster_mean_slack: Sequence[float],
+                              voltages_ascending: np.ndarray) -> np.ndarray:
+    """Map clusters to voltages: higher min-slack -> lower V_ccint (Sec. I).
+
+    ``cluster_mean_slack[c]`` is the representative (mean or min) slack of
+    cluster ``c``; returns ``v[c]`` per cluster.
+    """
+    slack = np.asarray(cluster_mean_slack, dtype=np.float64)
+    if len(slack) != len(voltages_ascending):
+        raise ValueError("one voltage per cluster required")
+    order = np.argsort(-slack)           # highest slack first
+    v = np.empty_like(slack)
+    v[order] = np.sort(np.asarray(voltages_ascending))
+    return v
+
+
+@dataclasses.dataclass
+class RuntimeScheme:
+    """Algorithm 2 with the trial-run convergence wrapper.
+
+    ``flag_reduce`` — the paper's text is self-contradictory ("ANDed value of
+    all error detection flags" vs "if any timing failure flag ... is high");
+    Algorithm 2's semantics require OR, which is the default.  AND is kept as
+    an option; tests show it fails to protect individual MACs.
+    """
+
+    v_s: float
+    v_floor: float
+    v_ceil: float
+    flag_reduce: str = "or"              # "or" | "and"
+    history: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    def partition_flags(self, mac_flags: np.ndarray,
+                        partition_of_mac: np.ndarray) -> np.ndarray:
+        """Reduce per-MAC Razor flags to per-partition timing_fail flags."""
+        n_part = int(partition_of_mac.max()) + 1
+        flags = np.zeros(n_part, dtype=bool)
+        for p in range(n_part):
+            sel = mac_flags[partition_of_mac == p]
+            if sel.size == 0:
+                continue
+            flags[p] = sel.any() if self.flag_reduce == "or" else sel.all()
+        return flags
+
+    def step(self, v: np.ndarray, fail_flags: np.ndarray) -> np.ndarray:
+        """One Algorithm-2 update: +V_s on failure else -V_s, clamped."""
+        v = np.asarray(v, dtype=np.float64)
+        nv = np.where(fail_flags, v + self.v_s, v - self.v_s)
+        nv = np.clip(nv, self.v_floor, self.v_ceil)
+        self.history.append(nv.copy())
+        return nv
+
+    def calibrate(self, v0: np.ndarray,
+                  trial: Callable[[np.ndarray], np.ndarray],
+                  max_trials: int = 64) -> np.ndarray:
+        """Run trial runs until each partition oscillates (paper's pre-run
+        tuning).  ``trial(v) -> per-partition fail flags``.
+
+        Locks each partition at the upper rail of its final oscillation, i.e.
+        the lowest voltage that produced a clean run.
+        """
+        v = np.asarray(v0, dtype=np.float64).copy()
+        last_clean = np.full(len(v), np.nan)
+        seen_fail = np.zeros(len(v), dtype=bool)
+        for _ in range(max_trials):
+            flags = trial(v)
+            seen_fail |= flags
+            last_clean = np.where(~flags & (np.isnan(last_clean) | (v < last_clean)),
+                                  v, last_clean)
+            # converged once every partition has a clean voltage and has either
+            # bounced off a failing one or sits clean on the floor
+            at_floor_clean = (~flags) & (v <= self.v_floor + 1e-12)
+            if np.all((~np.isnan(last_clean)) & (seen_fail | at_floor_clean)):
+                break
+            v = self.step(v, flags)
+        out = np.where(np.isnan(last_clean), self.v_ceil, last_clean)
+        return out
+
+
+def runtime_voltage_scaling(v: np.ndarray, fail_flags: np.ndarray, v_s: float,
+                            v_floor: float = 0.0, v_ceil: float = np.inf) -> np.ndarray:
+    """Stateless single step of Algorithm 2 (verbatim form)."""
+    scheme = RuntimeScheme(v_s=v_s, v_floor=v_floor, v_ceil=v_ceil)
+    return scheme.step(np.asarray(v, dtype=np.float64), np.asarray(fail_flags, bool))

@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline (sharded, packed, prefetched)."""
+from .pipeline import Batch, DataConfig, PrefetchLoader, SyntheticDataset, EOS

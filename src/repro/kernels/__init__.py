@@ -1,0 +1,13 @@
+"""Pallas TPU kernels (validated in interpret mode vs ref.py oracles):
+
+systolic_mac      voltage-island partitioned matmul + Razor flags (the paper)
+razor_matmul      int8 main path + f32 shadow, per-tile mismatch correction
+precision_island  per-tile int4/int8/f32 tiers (voltage ladder analogue)
+wkv6              chunked RWKV6 recurrence (MXU-mapped)
+ssd_chunk         chunked Mamba2 SSD recurrence
+ops               jit wrappers + the composed voltage_scaled_matmul flow
+"""
+
+from . import ref
+from .ops import (precision_mm, razor_mm, ssd_op, systolic_matmul,
+                  voltage_scaled_matmul, wkv6_op)

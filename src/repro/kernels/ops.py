@@ -1,0 +1,116 @@
+"""jit'd wrappers over the Pallas kernels + the composed paper-flow op.
+
+``voltage_scaled_matmul`` is the end-to-end TPU mapping of the paper: static
+tier/voltage assignment over weight tiles -> partitioned kernel execution ->
+Razor flags -> one runtime (Algorithm 2) adjustment step — usable as a
+drop-in matmul for experiments.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.precision import (ENERGY_PER_MAC, TIERS, PrecisionController,
+                              static_tier_assignment, tile_headroom)
+from ..core.voltage import static_voltage_scaling
+from .precision_island import precision_island
+from .razor_matmul import razor_matmul
+from .ssd_chunk import ssd_chunk
+from .systolic_mac import systolic_mac
+from .wkv6 import wkv6
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def systolic_matmul(a, b, v_map, v_safe, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return systolic_mac(a, b, v_map, v_safe, **kw)
+
+
+def razor_mm(a, b, tol: float = 0.05, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return razor_matmul(a, b, tol=tol, **kw)
+
+
+def precision_mm(a, b, tiers, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return precision_island(a, b, tiers, **kw)
+
+
+def wkv6_op(r, k, v, w_log, u, state, chunk: int = 64, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return wkv6(r, k, v, w_log, u, state, chunk=chunk, **kw)
+
+
+def ssd_op(x, dt, A_log, B, C, D, state, chunk: int = 64, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return ssd_chunk(x, dt, A_log, B, C, D, state, chunk=chunk, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Composed paper flow on one GEMM
+# ---------------------------------------------------------------------------
+
+
+def voltage_scaled_matmul(a: jax.Array, b: jax.Array, *, block: int = 128,
+                          n_partitions: int = 4,
+                          v_min: float = 1.0, v_crash: float = 0.7,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[jax.Array, dict]:
+    """Paper flow on a single GEMM.
+
+    1. 'Timing extraction': per-tile quantization headroom of ``b`` (the
+       resident weights — the slack analogue).
+    2. Clustering/static scheme: Algorithm 1 bands headroom into
+       ``n_partitions`` voltages.
+    3. Partitioned execution: systolic_mac with the derived voltage map;
+       min-safe voltage per tile derived from headroom (less headroom ->
+       needs more voltage).
+    4. Razor flags -> one Algorithm-2 adjustment -> corrected rerun.
+
+    Returns (C, info) where info carries voltages, flags and the modeled
+    energy ratio vs an all-nominal run.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    gm, gn = m // block, n // block
+
+    head = tile_headroom(np.asarray(b, np.float32), tile=k)  # (1, gn) over cols
+    head_cols = tile_headroom(np.asarray(b, np.float32).T, tile=block)
+    # per output tile: headroom of the b-column block feeding it
+    h_tile = np.tile(head_cols[:, :1].T if head_cols.shape[1] == 1 else
+                     head_cols.mean(1, keepdims=True).T, (gm, 1))
+    h_tile = np.broadcast_to(h_tile[:gm, :gn], (gm, gn))
+
+    bands = static_voltage_scaling(v_min, v_crash, n_partitions)
+    tiers = static_tier_assignment(h_tile, n_tiers=n_partitions)
+    # tier 0 = most headroom -> lowest voltage
+    v_map = np.asarray(bands)[tiers]
+    lo, hi = h_tile.min(), h_tile.max()
+    frac = (h_tile - lo) / max(hi - lo, 1e-9)
+    v_safe = v_crash + (1 - frac) * (v_min - v_crash) * 0.9
+
+    c, flags = systolic_mac(a, b, jnp.asarray(v_map), jnp.asarray(v_safe),
+                            block_m=block, block_n=block,
+                            block_k=min(block, k), interpret=interpret)
+    # Algorithm 2: bump failed partitions one step, clean ones down one step
+    v_s = (v_min - v_crash) / n_partitions
+    v_adj = np.where(np.asarray(flags) > 0, v_map + v_s,
+                     np.maximum(v_map - v_s, v_crash))
+    c2, flags2 = systolic_mac(a, b, jnp.asarray(v_adj), jnp.asarray(v_safe),
+                              block_m=block, block_n=block,
+                              block_k=min(block, k), interpret=interpret)
+    energy_ratio = float(np.mean((v_adj / v_min) ** 2))
+    return c2, {
+        "v_static": v_map, "v_runtime": v_adj,
+        "flags_static": np.asarray(flags), "flags_runtime": np.asarray(flags2),
+        "energy_ratio_vs_nominal": energy_ratio,
+    }

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: Razor double-sampled matmul.
+
+Main path = int8 x int8 -> int32 (the cheap near-threshold path); shadow
+path = f32 (the delayed shadow register).  Per output tile the kernel emits a
+mismatch flag (relative Frobenius error > tol) and — like Razor's replay —
+*corrects* flagged tiles to the shadow value.  This doubles the multiplier
+count exactly as the paper notes for Razor (Sec. II-E); the flags feed
+core.precision.PrecisionController (Algorithm 2 on precision tiers).
+
+Grid: (M/bm, N/bn); K is loaded whole per tile (rows fit VMEM for K <= ~4k).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_rows(x):
+    """Symmetric per-row int8 quantization (row = last axis)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q, scale
+
+
+def _kernel(a_ref, bt_ref, out_ref, flag_ref, rel_ref, *, tol: float):
+    a = a_ref[...].astype(jnp.float32)           # (bm, K)
+    bt = bt_ref[...].astype(jnp.float32)         # (bn, K)  (B pre-transposed)
+    qa, sa = _quant_rows(a)
+    qb, sb = _quant_rows(bt)
+    main = jnp.dot(qa, qb.T, preferred_element_type=jnp.float32) * sa * sb.T
+    shadow = jnp.dot(a, bt.T, preferred_element_type=jnp.float32)
+    err = jnp.sqrt(jnp.sum((main - shadow) ** 2))
+    refn = jnp.sqrt(jnp.sum(shadow ** 2)) + 1e-12
+    rel = err / refn
+    fired = rel > tol
+    out_ref[...] = jnp.where(fired, shadow, main)
+    flag_ref[0, 0] = fired.astype(jnp.int32)
+    rel_ref[0, 0] = rel
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "tol",
+                                             "interpret"))
+def razor_matmul(a: jax.Array, b: jax.Array, *, tol: float = 0.05,
+                 block_m: int = 128, block_n: int = 128,
+                 interpret: bool = True):
+    """Returns (C f32 (M, N) corrected, flags int32 (gm, gn), rel (gm, gn))."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % block_m == 0 and n % block_n == 0
+    gm, gn = m // block_m, n // block_n
+    bt = b.T                                      # (n, k): rows quantize over k
+    kernel = functools.partial(_kernel, tol=tol)
+    return pl.pallas_call(
+        kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((gm, gn), jnp.int32),
+            jax.ShapeDtypeStruct((gm, gn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, bt)

@@ -1,0 +1,184 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Semantics shared between kernel and oracle are defined HERE; kernels must
+reproduce these bit-for-bit up to dtype tolerance.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+EXP_CLAMP = 30.0
+
+
+# ---------------------------------------------------------------------------
+# systolic_mac: voltage-island partitioned matmul with timing-fault injection
+# ---------------------------------------------------------------------------
+
+
+def corrupt_low_bits(x: jax.Array, keep_bits: int = 8) -> jax.Array:
+    """Timing-failure corruption model: the accumulator's low mantissa bits
+    miss the clock edge — emulated by mantissa truncation of the f32 result."""
+    xi = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    mask = jnp.uint32(0xFFFFFFFF) << jnp.uint32(23 - keep_bits)
+    return jax.lax.bitcast_convert_type(xi & mask, jnp.float32)
+
+
+def systolic_mac(a: jax.Array, b: jax.Array, v_map: jax.Array,
+                 v_safe: jax.Array, block: int = 128,
+                 keep_bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """C = a @ b on a voltage-island-partitioned MAC grid.
+
+    v_map / v_safe: (M/block, N/block) per-tile rail voltage and minimum safe
+    voltage.  Tiles with v < v_safe suffer the corruption model and raise
+    their Razor flag.  Returns (C (M, N) f32, flags (gm, gn) int32).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % block == 0 and n % block == 0
+    c = (a.astype(jnp.float32) @ b.astype(jnp.float32))
+    gm, gn = m // block, n // block
+    fail = (v_map < v_safe)
+    c_t = c.reshape(gm, block, gn, block)
+    corrupted = corrupt_low_bits(c_t, keep_bits)
+    out = jnp.where(fail[:, None, :, None], corrupted, c_t)
+    return out.reshape(m, n), fail.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# razor_matmul: low-precision main path + full-precision shadow + flags
+# ---------------------------------------------------------------------------
+
+
+def quantize_sym_i8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization (row = last-axis vectors)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def razor_matmul(a: jax.Array, b: jax.Array, tol: float = 0.05,
+                 block: int = 128) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Razor-style double-sampled matmul.
+
+    Main path: int8xint8->int32 (the near-threshold 'fast but risky' path).
+    Shadow path: f32 (the delayed-clock shadow register).
+    Per (block x block) tile: flag = relative Frobenius error > tol; flagged
+    tiles are *corrected* to the shadow value (razor replay semantics).
+    Returns (C (M,N) f32 corrected, flags (gm, gn) int32, rel_err (gm, gn)).
+    """
+    m, k = a.shape
+    _, n = b.shape
+    assert m % block == 0 and n % block == 0
+    qa, sa = quantize_sym_i8(a)                       # (m,k), (m,1)
+    qb, sb = quantize_sym_i8(b.T)                     # (n,k), (n,1)
+    main = (qa.astype(jnp.int32) @ qb.astype(jnp.int32).T).astype(jnp.float32)
+    main = main * sa * sb.T
+    shadow = a.astype(jnp.float32) @ b.astype(jnp.float32)
+    gm, gn = m // block, n // block
+    mt = main.reshape(gm, block, gn, block)
+    st = shadow.reshape(gm, block, gn, block)
+    err = jnp.sqrt(jnp.sum((mt - st) ** 2, axis=(1, 3)))
+    ref = jnp.sqrt(jnp.sum(st ** 2, axis=(1, 3))) + 1e-12
+    rel = err / ref
+    flags = (rel > tol).astype(jnp.int32)
+    out = jnp.where(flags[:, None, :, None] == 1, st, mt)
+    return out.reshape(m, n), flags, rel
+
+
+# ---------------------------------------------------------------------------
+# precision_island: per-tile precision-tier matmul
+# ---------------------------------------------------------------------------
+
+
+def quantize_sym_i4(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 7.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -7, 7)
+    return q.astype(jnp.int8), scale
+
+
+def _tile_matmul_at_tier(at: jax.Array, bt: jax.Array, tier: jax.Array):
+    """at: (bm, k); bt: (k, bn); tier scalar 0=int4 1=int8 2=bf16/f32."""
+    f32 = at.astype(jnp.float32) @ bt.astype(jnp.float32)
+    qa8, sa8 = quantize_sym_i8(at)
+    qb8, sb8 = quantize_sym_i8(bt.T)
+    i8 = (qa8.astype(jnp.int32) @ qb8.astype(jnp.int32).T).astype(jnp.float32) \
+        * sa8 * sb8.T
+    qa4, sa4 = quantize_sym_i4(at)
+    qb4, sb4 = quantize_sym_i4(bt.T)
+    i4 = (qa4.astype(jnp.int32) @ qb4.astype(jnp.int32).T).astype(jnp.float32) \
+        * sa4 * sb4.T
+    return jnp.where(tier == 0, i4, jnp.where(tier == 1, i8, f32))
+
+
+def precision_island(a: jax.Array, b: jax.Array, tiers: jax.Array,
+                     block: int = 128) -> jax.Array:
+    """C = a @ b where each (block x block) output tile computes at its
+    assigned tier (0=int4, 1=int8, 2=full f32) — the TPU analogue of
+    per-partition V_ccint (DESIGN.md Sec. 2b)."""
+    m, k = a.shape
+    _, n = b.shape
+    gm, gn = m // block, n // block
+    rows = []
+    for i in range(gm):
+        cols = []
+        at = a[i * block:(i + 1) * block]
+        for j in range(gn):
+            bt = b[:, j * block:(j + 1) * block]
+            cols.append(_tile_matmul_at_tier(at, bt, tiers[i, j]))
+        rows.append(jnp.concatenate(cols, axis=1))
+    return jnp.concatenate(rows, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# wkv6: RWKV6 recurrence (naive scan oracle)
+# ---------------------------------------------------------------------------
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
+         u: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Naive per-token recurrence.  r,k,v,w_log: (b, s, h, p); u: (h, p);
+    state: (b, h, p, p).  y_t = r_t.(S + (u*k_t) v_t^T); S' = diag(w)S + k v^T.
+    """
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs
+        kv = jnp.einsum("bhp,bhq->bhpq", k_t, v_t)
+        y = jnp.einsum("bhp,bhpq->bhq", r_t, S + u[None, :, :, None] * kv)
+        S = S * jnp.exp(w_t)[..., None] + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w_log))
+    S, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), S
+
+
+# ---------------------------------------------------------------------------
+# ssd: Mamba2 state-space recurrence (naive scan oracle)
+# ---------------------------------------------------------------------------
+
+
+def ssd(x: jax.Array, dt: jax.Array, A_log: jax.Array, B: jax.Array,
+        C: jax.Array, D: jax.Array,
+        state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Naive SSD recurrence.  x: (b, s, h, p); dt: (b, s, h); B, C: (b, s, n);
+    A_log, D: (h,); state: (b, h, n, p).
+      h' = h * exp(dt * -exp(A_log)) + dt * B (x) x ; y = C . h' + D * x
+    """
+
+    def step(S, xs):
+        x_t, dt_t, B_t, C_t = xs
+        da = jnp.exp(jnp.clip(dt_t * -jnp.exp(A_log), -EXP_CLAMP, 0.0))
+        S = (S * da[:, :, None, None]
+             + jnp.einsum("bn,bh,bhp->bhnp", B_t, dt_t, x_t))
+        y = jnp.einsum("bn,bhnp->bhp", C_t, S) + D[None, :, None] * x_t
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dt, B, C))
+    S, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), S

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: chunked Mamba2 SSD recurrence.
+
+Same mapping strategy as wkv6: the per-token state recurrence (ref.ssd) is
+computed in chunk-parallel matmul form; the (n, p) cross-chunk state rides in
+VMEM scratch across the sequential chunk grid axis.
+
+Grid: (B*H, n_chunks).  B/C are shared across heads (n_groups=1) and arrive
+pre-broadcast from ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EXP_CLAMP = 30.0
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, alog_ref, d_ref, s0_ref,
+            y_ref, sout_ref, state, *, n_chunks: int):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state[...] = s0_ref[0]
+
+    x = x_ref[0].astype(jnp.float32)          # (ch, p)
+    dt = dt_ref[0].astype(jnp.float32)        # (ch,)
+    B = b_ref[0].astype(jnp.float32)          # (ch, n)
+    C = c_ref[0].astype(jnp.float32)          # (ch, n)
+    a = -jnp.exp(alog_ref[0])                 # scalar
+    D = d_ref[0]                              # scalar
+    S = state[...]                            # (n, p)
+
+    da = dt * a                               # (ch,) log decay, <= 0
+    cum = jnp.cumsum(da)                      # inclusive
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # (ch, ch)
+    decay = jnp.exp(jnp.clip(cum[:, None] - cum[None, :], -EXP_CLAMP,
+                             EXP_CLAMP))
+    ch = x.shape[0]
+    mask = jnp.tril(jnp.ones((ch, ch), jnp.float32))              # inclusive
+    W = scores * decay * mask
+    xdt = x * dt[:, None]
+    y = jnp.dot(W, xdt, preferred_element_type=jnp.float32)
+    # inter-chunk: C_t . S_in * exp(cum_t)
+    y = y + jnp.dot(C, S, preferred_element_type=jnp.float32) \
+        * jnp.exp(jnp.clip(cum, -EXP_CLAMP, 0.0))[:, None]
+    y = y + D * x
+    y_ref[0] = y
+
+    # state: S' = S * exp(cum_end) + sum_s exp(cum_end - cum_s) B_s (x) xdt_s
+    tail = jnp.exp(jnp.clip(cum[-1] - cum, -EXP_CLAMP, EXP_CLAMP))
+    B_tail = B * tail[:, None]
+    state[...] = (S * jnp.exp(jnp.clip(cum[-1], -EXP_CLAMP, 0.0))
+                  + jnp.dot(B_tail.T, xdt, preferred_element_type=jnp.float32))
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _out():
+        sout_ref[0] = state[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk(x: jax.Array, dt: jax.Array, A_log: jax.Array, B: jax.Array,
+              C: jax.Array, D: jax.Array, state: jax.Array, *,
+              chunk: int = 64, interpret: bool = True):
+    """x: (b, s, h, p); dt: (b, s, h); A_log, D: (h,); B, C: (b, s, n);
+    state: (b, h, n, p).  Returns (y (b, s, h, p), final_state)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    bh = b * h
+
+    xf = jnp.moveaxis(x.astype(jnp.float32), 2, 1).reshape(bh, s, p)
+    dtf = jnp.moveaxis(dt.astype(jnp.float32), 2, 1).reshape(bh, s)
+    Bf = jnp.repeat(B.astype(jnp.float32), h, axis=0).reshape(b, h, s, n) \
+        .reshape(bh, s, n)
+    Cf = jnp.repeat(C.astype(jnp.float32), h, axis=0).reshape(b, h, s, n) \
+        .reshape(bh, s, n)
+    af = jnp.tile(A_log.astype(jnp.float32), b)            # (bh,)
+    df = jnp.tile(D.astype(jnp.float32), b)
+    sf = state.reshape(bh, n, p).astype(jnp.float32)
+
+    y, s_out = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=nc),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk), lambda i, c: (i, c)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1,), lambda i, c: (i,)),
+            pl.BlockSpec((1,), lambda i, c: (i,)),
+            pl.BlockSpec((1, n, p), lambda i, c: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, n, p), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((bh, s, p), jnp.float32),
+                   jax.ShapeDtypeStruct((bh, n, p), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, Bf, Cf, af, df, sf)
+    y = jnp.moveaxis(y.reshape(b, h, s, p), 1, 2)
+    return y, s_out.reshape(b, h, n, p)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: voltage-island partitioned systolic matmul with
+timing-fault injection + Razor flags (the paper's partitioned MAC array
+mapped onto MXU tiles; DESIGN.md Sec. 2b).
+
+Grid: (M/bm, N/bn, K/bk); each (i, j) output tile is one 'FPGA partition
+cell' carrying a rail voltage v_map[i, j] and a minimum safe voltage
+v_safe[i, j].  Under-volted tiles corrupt their accumulator low bits (the
+timing-failure model shared with ref.corrupt_low_bits) and raise a flag —
+exactly the per-partition Razor flag the runtime scheme consumes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, vmap_ref, vsafe_ref, out_ref, flag_ref, acc_ref,
+            *, keep_bits: int, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...].astype(jnp.float32),
+                            b_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        acc = acc_ref[...]
+        fail = vmap_ref[0, 0] < vsafe_ref[0, 0]
+        # mantissa truncation = low accumulator bits missing the clock edge
+        bits = jax.lax.bitcast_convert_type(acc, jnp.uint32)
+        mask = jnp.uint32(0xFFFFFFFF) << jnp.uint32(23 - keep_bits)
+        corrupted = jax.lax.bitcast_convert_type(bits & mask, jnp.float32)
+        out_ref[...] = jnp.where(fail, corrupted, acc)
+        flag_ref[0, 0] = fail.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "keep_bits", "interpret"))
+def systolic_mac(a: jax.Array, b: jax.Array, v_map: jax.Array,
+                 v_safe: jax.Array, *, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 128, keep_bits: int = 8,
+                 interpret: bool = True):
+    """C = a @ b with per-tile voltage-island fault semantics.
+
+    a: (M, K); b: (K, N); v_map/v_safe: (M/bm, N/bn).
+    Returns (C f32 (M, N), flags int32 (M/bm, N/bn)).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    gm, gn, gk = m // block_m, n // block_n, k // block_k
+    assert v_map.shape == (gm, gn) == v_safe.shape
+
+    kernel = functools.partial(_kernel, keep_bits=keep_bits, n_k=gk)
+    return pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((gm, gn), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b, v_map.astype(jnp.float32), v_safe.astype(jnp.float32))

@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape x mesh) cell on the production meshes, print
+memory_analysis() / cost_analysis(), extract the collective schedule, and
+write one JSON artifact per cell for the roofline (deliverable g).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b \
+        --shape train_4k [--multi-pod] [--set moe_impl=ep_a2a] [--tag name]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import SHAPES, ARCHS, cell_is_runnable, get_config
+from .mesh import chips, make_production_mesh
+from .steps import build_cell
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _cost_dict(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and not k.startswith("utilization")}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             overrides=None, tag: str = "", verbose: bool = True) -> dict:
+    from ..roofline.hlo import parse_collectives, summarize_collectives, \
+        total_collective_bytes
+
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(get_config(arch), shape)
+    mesh_kind = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "overrides": overrides or {}, "tag": tag}
+    if not ok:
+        record.update(status="skipped", reason=why)
+        if verbose:
+            print(f"[skip] {arch} x {shape_name}: {why}")
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        step = build_cell(arch, shape, mesh, overrides=overrides)
+        lowered = step.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        cost = _cost_dict(compiled)
+        hlo = compiled.as_text()
+        colls = parse_collectives(hlo)
+        op_b, wire_b = total_collective_bytes(colls)
+        record.update(
+            status="ok", kind=step.kind, chips=chips(mesh),
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+            },
+            cost=cost,
+            collectives=summarize_collectives(colls),
+            collective_operand_bytes=int(op_b),
+            collective_wire_bytes=int(wire_b),
+            hlo_bytes=len(hlo),
+        )
+        if verbose:
+            args_gib = ma.argument_size_in_bytes / 2**30
+            temp_gib = ma.temp_size_in_bytes / 2**30
+            print(f"[ok]   {arch} x {shape_name} x {mesh_kind} ({step.kind}): "
+                  f"args {args_gib:.2f} GiB/dev, temp {temp_gib:.2f} GiB/dev, "
+                  f"flops/dev {cost.get('flops', 0):.3e}, "
+                  f"colls {record['collectives']}, "
+                  f"compile {t_compile:.1f}s")
+    except Exception as e:                                  # noqa: BLE001
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name} x {mesh_kind}: {e}")
+    return record
+
+
+def save(record: dict) -> Path:
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    tag = f"_{record['tag']}" if record.get("tag") else ""
+    name = f"{record['arch']}_{record['shape']}_{record['mesh']}{tag}.json"
+    name = name.replace("/", "-")
+    path = ARTIFACT_DIR / name
+    path.write_text(json.dumps(record, indent=1))
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every (arch x shape)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (e.g. moe_impl=ep_a2a)")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, multi_pod=mp,
+                           overrides=overrides or None, tag=args.tag)
+            save(rec)
+            n_fail += rec["status"] == "error"
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Step builders: train / prefill / decode jitted functions with full
+in/out shardings for any (arch x shape x mesh) cell.
+
+Used by the dry-run, the trainer and the server; the same builders serve the
+real CPU smoke runs (tiny configs) and the 512-device production lowering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import optim
+from ..configs import get_config
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import model_api
+from ..models.api import BatchSpec, ModelAPI
+from ..models.shardlib import (ParamSpec, Rules, spec_tree_to_shardings,
+                               spec_tree_to_structs, use_rules)
+from .mesh import rules_for_mesh
+
+Pytree = Any
+
+
+def _batch_structs(batch_specs: Dict[str, BatchSpec]):
+    return {k: v.struct() for k, v in batch_specs.items()}
+
+
+def _batch_shardings(batch_specs: Dict[str, BatchSpec], rules: Rules):
+    return {k: rules.sharding(v.logical) for k, v in batch_specs.items()}
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    """A jitted step plus everything needed to lower it abstractly."""
+
+    fn: Any                      # the jitted callable
+    arg_structs: Tuple[Pytree, ...]
+    kind: str                    # train | prefill | decode
+    cfg: ModelConfig
+    api: ModelAPI
+    rules: Rules
+
+    def lower(self):
+        return self.fn.lower(*self.arg_structs)
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, rules: Rules,
+                     opt_cfg: Optional[optim.AdamWConfig] = None,
+                     donate: bool = True) -> BuiltStep:
+    api = model_api(cfg)
+    opt_cfg = opt_cfg or optim.AdamWConfig()
+    pspecs = api.param_specs()
+    ospecs = optim.state_specs(pspecs, opt_cfg)
+    bspecs = api.input_specs(shape)
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules):
+            loss, grads = jax.value_and_grad(api.loss)(params, batch)
+            params, opt_state = optim.apply_updates(params, opt_state, grads,
+                                                    opt_cfg)
+        return params, opt_state, loss
+
+    p_sh = spec_tree_to_shardings(pspecs, rules)
+    o_sh = spec_tree_to_shardings(ospecs, rules)
+    b_sh = _batch_shardings(bspecs, rules)
+    loss_sh = rules.sharding(())
+    with use_rules(rules):
+        fn = jax.jit(train_step,
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, loss_sh),
+                     donate_argnums=(0, 1) if donate else ())
+    args = (spec_tree_to_structs(pspecs), spec_tree_to_structs(ospecs),
+            _batch_structs(bspecs))
+    return BuiltStep(fn, args, "train", cfg, api, rules)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                       rules: Rules) -> BuiltStep:
+    api = model_api(cfg)
+    pspecs = api.param_specs()
+    bspecs = api.input_specs(shape)
+    sspecs = api.decode_state_specs(shape)
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            return api.prefill(params, batch, max_len=shape.seq_len)
+
+    p_sh = spec_tree_to_shardings(pspecs, rules)
+    b_sh = _batch_shardings(bspecs, rules)
+    logits_sh = rules.sharding(("batch", "tp"))
+    s_sh = spec_tree_to_shardings(sspecs, rules)
+    with use_rules(rules):
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                     out_shardings=(logits_sh, s_sh))
+    args = (spec_tree_to_structs(pspecs), _batch_structs(bspecs))
+    return BuiltStep(fn, args, "prefill", cfg, api, rules)
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, rules: Rules,
+                      donate: bool = True) -> BuiltStep:
+    api = model_api(cfg)
+    pspecs = api.param_specs()
+    sspecs = api.decode_state_specs(shape)
+    tokens = BatchSpec((shape.global_batch, 1), jnp.int32, ("batch", None))
+
+    def decode_step(params, state, toks):
+        with use_rules(rules):
+            return api.decode_step(params, state, toks)
+
+    p_sh = spec_tree_to_shardings(pspecs, rules)
+    s_sh = spec_tree_to_shardings(sspecs, rules)
+    logits_sh = rules.sharding(("batch", "tp"))
+    with use_rules(rules):
+        fn = jax.jit(decode_step,
+                     in_shardings=(p_sh, s_sh, rules.sharding(tokens.logical)),
+                     out_shardings=(logits_sh, s_sh),
+                     donate_argnums=(1,) if donate else ())
+    args = (spec_tree_to_structs(pspecs), spec_tree_to_structs(sspecs),
+            tokens.struct())
+    return BuiltStep(fn, args, "decode", cfg, api, rules)
+
+
+def build_cell(arch: str, shape: ShapeConfig, mesh: jax.sharding.Mesh,
+               smoke: bool = False,
+               overrides: Optional[Dict[str, Any]] = None,
+               opt_cfg: Optional[optim.AdamWConfig] = None) -> BuiltStep:
+    """One (arch x shape) cell on a mesh: picks the right step kind."""
+    cfg = get_config(arch, smoke=smoke)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    long_ctx = shape.name == "long_500k"
+    rules = rules_for_mesh(mesh, long_context=long_ctx)
+    if shape.kind != "train" and cfg.serve_weight_layout == "tp2d":
+        from .mesh import tp2d_rules
+        rules = tp2d_rules(mesh, long_context=long_ctx)
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, rules, opt_cfg)
+    if shape.kind == "prefill":
+        if cfg.family in ("ssm", "hybrid"):
+            # SSM prompts are absorbed via chunked forward = the train fwd;
+            # lower the loss-forward as the prefill-compute proxy
+            return build_forward_step(cfg, shape, rules)
+        return build_prefill_step(cfg, shape, rules)
+    return build_decode_step(cfg, shape, rules)
+
+
+def build_forward_step(cfg: ModelConfig, shape: ShapeConfig,
+                       rules: Rules) -> BuiltStep:
+    """Forward-only (no grad) step — SSM/hybrid prefill proxy."""
+    api = model_api(cfg)
+    pspecs = api.param_specs()
+    train_like = ShapeConfig(shape.name, shape.seq_len, shape.global_batch,
+                             "train")
+    bspecs = api.input_specs(train_like)
+
+    def fwd(params, batch):
+        with use_rules(rules):
+            return api.loss(params, batch)
+
+    p_sh = spec_tree_to_shardings(pspecs, rules)
+    b_sh = _batch_shardings(bspecs, rules)
+    with use_rules(rules):
+        fn = jax.jit(fwd, in_shardings=(p_sh, b_sh),
+                     out_shardings=rules.sharding(()))
+    args = (spec_tree_to_structs(pspecs), _batch_structs(bspecs))
+    return BuiltStep(fn, args, "prefill", cfg, api, rules)

@@ -1,0 +1,10 @@
+"""Model zoo: unified decoder LM (dense/MoE/VLM), SSM (RWKV6/Mamba2), hybrid
+(Zamba2), encoder-decoder (Seamless) — all scan-stacked, logically sharded."""
+
+from .api import BatchSpec, ModelAPI, model_api
+from .shardlib import (ParamSpec, Rules, current_rules, init_param_tree,
+                       multi_pod_rules, param_count, replicated_rules, shard,
+                       single_pod_rules, spec_tree_to_pspecs,
+                       spec_tree_to_shardings, spec_tree_to_structs, use_rules)
+
+__all__ = [name for name in dir() if not name.startswith("_")]

@@ -1,0 +1,148 @@
+"""Family dispatch: one uniform interface over every architecture family.
+
+    api = model_api(cfg)
+    api.param_specs() / api.init_params(key)
+    api.loss(params, batch)
+    api.prefill(params, batch) -> (logits, state)
+    api.decode_step(params, state, tokens) -> (logits, state)
+    api.input_specs(shape) -> batch of ShapeDtypeStructs (+ logical shardings)
+    api.decode_state_specs(shape) -> decode-state ParamSpecs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, lm, ssm
+from .shardlib import ParamSpec, init_param_tree
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSpec:
+    """ShapeDtypeStruct + logical axes for one batch input."""
+
+    shape: Tuple[int, ...]
+    dtype: Any
+    logical: Tuple[Optional[str], ...]
+
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def _token_batch(b: int, s: int, with_labels: bool) -> Dict[str, BatchSpec]:
+    out = {"tokens": BatchSpec((b, s), jnp.int32, ("batch", None))}
+    if with_labels:
+        out["labels"] = BatchSpec((b, s), jnp.int32, ("batch", None))
+    return out
+
+
+@dataclasses.dataclass
+class ModelAPI:
+    cfg: ModelConfig
+
+    # ---- params --------------------------------------------------------------
+
+    def param_specs(self) -> Params:
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return lm.param_specs(self.cfg)
+        if f == "ssm":
+            return ssm.rwkv6_param_tree(self.cfg)
+        if f == "hybrid":
+            return ssm.zamba2_param_tree(self.cfg)
+        if f == "encdec":
+            return encdec.param_specs(self.cfg)
+        raise ValueError(f"unknown family {f}")
+
+    def init_params(self, key: jax.Array) -> Params:
+        return init_param_tree(key, self.param_specs())
+
+    # ---- steps ---------------------------------------------------------------
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return lm.loss_fn(params, batch, self.cfg)
+        if f == "ssm":
+            return ssm.rwkv6_loss(params, batch, self.cfg)
+        if f == "hybrid":
+            return ssm.zamba2_loss(params, batch, self.cfg)
+        if f == "encdec":
+            return encdec.loss_fn(params, batch, self.cfg)
+        raise ValueError(f)
+
+    def prefill(self, params: Params, batch: Dict[str, jax.Array],
+                max_len: Optional[int] = None):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return lm.prefill(params, batch, self.cfg, max_len)
+        if f == "encdec":
+            return encdec.prefill(params, batch, self.cfg, max_len)
+        raise NotImplementedError(
+            f"prefill for {f}: SSM/hybrid prompts are absorbed by running "
+            "decode_step over the prompt (O(1) state)")
+
+    def decode_step(self, params: Params, state: Params, tokens: jax.Array):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return lm.decode_step(params, state, tokens, self.cfg)
+        if f == "ssm":
+            return ssm.rwkv6_decode_step(params, state, tokens, self.cfg)
+        if f == "hybrid":
+            return ssm.zamba2_decode_step(params, state, tokens, self.cfg)
+        if f == "encdec":
+            return encdec.decode_step(params, state, tokens, self.cfg)
+        raise ValueError(f)
+
+    # ---- specs ---------------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, BatchSpec]:
+        """Batch stand-ins for one assigned (arch x shape) cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        f = cfg.family
+        if shape.kind == "decode":
+            return {"tokens": BatchSpec((b, 1), jnp.int32, ("batch", None))}
+        with_labels = shape.is_train
+        if f == "vlm":
+            p = min(cfg.frontend_tokens, s // 2)
+            batch = {
+                "patch_embeds": BatchSpec((b, p, cfg.d_model), jnp.bfloat16,
+                                          ("batch", None, None)),
+                **_token_batch(b, s - p, with_labels),
+            }
+            return batch
+        if f == "encdec":
+            t_enc = max(s // cfg.enc_frames_ratio, 1)
+            return {
+                "frames": BatchSpec((b, t_enc, cfg.d_model), jnp.bfloat16,
+                                    ("batch", None, None)),
+                **_token_batch(b, s, with_labels),
+            }
+        return _token_batch(b, s, with_labels)
+
+    def decode_state_specs(self, shape: ShapeConfig) -> Params:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        long_ctx = shape.name == "long_500k"
+        f = cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return lm.decode_state_specs(cfg, b, s, long_context=long_ctx)
+        if f == "ssm":
+            return ssm.rwkv6_state_specs(cfg, b)
+        if f == "hybrid":
+            return ssm.zamba2_state_specs(cfg, b, s, long_context=long_ctx)
+        if f == "encdec":
+            return encdec.decode_state_specs(cfg, b, s)
+        raise ValueError(f)
+
+
+def model_api(cfg: ModelConfig) -> ModelAPI:
+    return ModelAPI(cfg)

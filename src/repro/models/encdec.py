@@ -1,0 +1,194 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The speech frontend is a stub per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings (b, t_enc, d).  Encoder: bidirectional attention;
+decoder: causal self-attention + cross-attention to the encoder output.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (KVCacheSpec, _mask, _qkv, _repeat_kv, _sdpa, attention, scan_layers,
+                     attention_param_specs, chunked_softmax_xent,
+                     decode_attention, embed, embed_param_specs, logits_last,
+                     mlp, mlp_param_specs, rmsnorm, rmsnorm_spec)
+from .shardlib import ParamSpec, shard
+
+Params = Dict[str, Any]
+
+
+def _remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def cross_attention_param_specs(cfg: ModelConfig, layers: int) -> Params:
+    return attention_param_specs(cfg, layers=layers)
+
+
+def cross_attention(x: jax.Array, mem_k: jax.Array, mem_v: jax.Array,
+                    p: Params, cfg: ModelConfig) -> jax.Array:
+    """x: (b, s, d) queries; mem_k/mem_v: (b, t, h_kv, dh) projected memory."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = _repeat_kv(mem_k, cfg.n_heads)
+    v = _repeat_kv(mem_v, cfg.n_heads)
+    keep = jnp.ones((s, k.shape[1]), bool)
+    o = _sdpa(q, k, v, keep, cfg.d_head).reshape(b, s, cfg.q_dim)
+    return o @ p["wo"]
+
+
+def project_memory(mem: jax.Array, p: Params, cfg: ModelConfig):
+    b, t, _ = mem.shape
+    k = (mem @ p["wk"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+    v = (mem @ p["wv"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+    return k, v
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    enc = {
+        "norm_attn": ParamSpec((Le, cfg.d_model), jnp.float32,
+                               ("layers", None), init="ones"),
+        "norm_mlp": ParamSpec((Le, cfg.d_model), jnp.float32,
+                              ("layers", None), init="ones"),
+        "attn": attention_param_specs(cfg, layers=Le),
+        "mlp": mlp_param_specs(cfg, layers=Le),
+    }
+    dec = {
+        "norm_self": ParamSpec((Ld, cfg.d_model), jnp.float32,
+                               ("layers", None), init="ones"),
+        "norm_cross": ParamSpec((Ld, cfg.d_model), jnp.float32,
+                                ("layers", None), init="ones"),
+        "norm_mlp": ParamSpec((Ld, cfg.d_model), jnp.float32,
+                              ("layers", None), init="ones"),
+        "self_attn": attention_param_specs(cfg, layers=Ld),
+        "cross_attn": cross_attention_param_specs(cfg, layers=Ld),
+        "mlp": mlp_param_specs(cfg, layers=Ld),
+    }
+    return {**embed_param_specs(cfg), "encoder": enc, "decoder": dec,
+            "enc_norm": rmsnorm_spec(cfg.d_model),
+            "final_norm": rmsnorm_spec(cfg.d_model)}
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = shard(frames.astype(jnp.bfloat16), "batch", None, None)
+
+    def block(x, lp):
+        h = rmsnorm(x, lp["norm_attn"])
+        x = x + attention(h, lp["attn"], cfg, causal=False)
+        h = rmsnorm(x, lp["norm_mlp"])
+        return x + mlp(h, lp["mlp"], cfg)
+
+    blk = _remat(block, cfg)
+    x = scan_layers(blk, x, params["encoder"], unroll=cfg.unroll_layers)
+    return rmsnorm(x, params["enc_norm"])
+
+
+def _dec_block(x, mem, lp, cfg):
+    h = rmsnorm(x, lp["norm_self"])
+    x = x + attention(h, lp["self_attn"], cfg, causal=True)
+    h = rmsnorm(x, lp["norm_cross"])
+    mk, mv = project_memory(mem, lp["cross_attn"], cfg)
+    x = x + cross_attention(h, mk, mv, lp["cross_attn"], cfg)
+    h = rmsnorm(x, lp["norm_mlp"])
+    return x + mlp(h, lp["mlp"], cfg)
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array],
+            cfg: ModelConfig) -> jax.Array:
+    mem = encode(params, batch["frames"], cfg)
+    x = embed(batch["tokens"], params)
+    blk = _remat(functools.partial(_dec_block, cfg=cfg), cfg)
+    x = scan_layers(lambda c, lp: blk(c, mem, lp), x, params["decoder"],
+                    unroll=cfg.unroll_layers)
+    x = rmsnorm(x, params["final_norm"])
+    return chunked_softmax_xent(x, params["embedding"], batch["labels"],
+                                cfg.loss_chunk, unroll=cfg.unroll_layers)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cross-attention memory K/V are computed once at prefill; decoder
+# self-attention uses a standard KV cache.
+# ---------------------------------------------------------------------------
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int,
+                       t_enc: Optional[int] = None) -> Params:
+    t_enc = max_len // cfg.enc_frames_ratio if t_enc is None else t_enc
+    self_kv = KVCacheSpec(layers=cfg.n_layers, batch=batch, max_len=max_len,
+                          n_kv=cfg.n_kv_heads, d_head=cfg.d_head).specs()
+    mem_shape = (cfg.n_layers, batch, t_enc, cfg.n_kv_heads, cfg.d_head)
+    mem_logical = ("layers", "batch", "seq_tp", None, None)
+    return {
+        "kv": self_kv,
+        "mem_k": ParamSpec(mem_shape, jnp.bfloat16, mem_logical, init="zeros"),
+        "mem_v": ParamSpec(mem_shape, jnp.bfloat16, mem_logical, init="zeros"),
+        "index": ParamSpec((), jnp.int32, (), init="zeros"),
+    }
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            max_len: Optional[int] = None):
+    """Encode frames + run decoder prompt; returns (logits, state)."""
+    mem = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_len = s if max_len is None else max_len
+    x = embed(tokens, params)
+    pos = jnp.arange(s)
+
+    def body(carry, lp):
+        x = carry
+        h = rmsnorm(x, lp["norm_self"])
+        _, k, v = _qkv(h, lp["self_attn"], cfg, jnp.broadcast_to(pos, (b, s)))
+        x = x + attention(h, lp["self_attn"], cfg, causal=True)
+        h = rmsnorm(x, lp["norm_cross"])
+        mk, mv = project_memory(mem, lp["cross_attn"], cfg)
+        x = x + cross_attention(h, mk, mv, lp["cross_attn"], cfg)
+        h = rmsnorm(x, lp["norm_mlp"])
+        x = x + mlp(h, lp["mlp"], cfg)
+        if max_len > s:
+            pad = max_len - s
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, {"k": k, "v": v, "mk": mk, "mv": mv}
+
+    x, caches = scan_layers(body, x, params["decoder"],
+                            unroll=cfg.unroll_layers, collect=True)
+    x = rmsnorm(x, params["final_norm"])
+    logits = logits_last(x[:, -1:], params["embedding"])
+    state = {"kv": {"k": caches["k"], "v": caches["v"]},
+             "mem_k": caches["mk"], "mem_v": caches["mv"],
+             "index": jnp.int32(s)}
+    return logits, state
+
+
+def decode_step(params: Params, state: Params, tokens: jax.Array,
+                cfg: ModelConfig):
+    x = embed(tokens, params)
+    index = state["index"]
+
+    def body(carry, layer):
+        x = carry
+        lp, kv_l, mk, mv = layer
+        h = rmsnorm(x, lp["norm_self"])
+        a, kv_new = decode_attention(h, lp["self_attn"], cfg, kv_l, index)
+        x = x + a
+        h = rmsnorm(x, lp["norm_cross"])
+        x = x + cross_attention(h, mk, mv, lp["cross_attn"], cfg)
+        h = rmsnorm(x, lp["norm_mlp"])
+        x = x + mlp(h, lp["mlp"], cfg)
+        return x, kv_new
+
+    x, kv = scan_layers(body, x, (params["decoder"], state["kv"],
+                                  state["mem_k"], state["mem_v"]),
+                        unroll=cfg.unroll_layers, collect=True)
+    x = rmsnorm(x, params["final_norm"])
+    logits = logits_last(x, params["embedding"])
+    return logits, {**state, "kv": kv, "index": index + 1}

@@ -1,0 +1,217 @@
+"""Decoder-only transformer LM covering the dense, MoE and VLM-backbone
+architectures (llava-next-mistral, grok-1, llama4-scout, granite, qwen1.5,
+starcoder2, phi4-mini).
+
+Layers are stacked on a leading L axis and driven by jax.lax.scan (compile
+time O(1 layer) — DESIGN.md Sec. 4); remat policy per block from cfg.remat.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (KVCacheSpec, attention, attention_param_specs, scan_layers,
+                     chunked_softmax_xent, decode_attention, embed,
+                     embed_param_specs, logits_last, mlp, mlp_param_specs, moe,
+                     moe_param_specs, rmsnorm, rmsnorm_spec)
+from .shardlib import ParamSpec, shard
+
+Params = Dict[str, Any]
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_save_attn:
+        # keep full-remat memory behaviour EXCEPT the attention outputs: the
+        # bwd pass then never re-runs the score/softmax pipeline (§Perf)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "attn_out"))
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    L = cfg.n_layers
+    blocks: Params = {
+        "norm_attn": ParamSpec((L, cfg.d_model), jnp.float32,
+                               ("layers", None), init="ones"),
+        "norm_mlp": ParamSpec((L, cfg.d_model), jnp.float32,
+                              ("layers", None), init="ones"),
+        "attn": attention_param_specs(cfg),
+    }
+    if cfg.n_experts:
+        blocks["moe"] = moe_param_specs(cfg)
+        if cfg.shared_expert:
+            blocks["mlp"] = mlp_param_specs(cfg)
+    else:
+        blocks["mlp"] = mlp_param_specs(cfg)
+    return {
+        **embed_param_specs(cfg),
+        "blocks": blocks,
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+
+
+def _block(x: jax.Array, lp: Params, cfg: ModelConfig,
+           positions: Optional[jax.Array] = None) -> jax.Array:
+    h = rmsnorm(x, lp["norm_attn"])
+    a = attention(h, lp["attn"], cfg, causal=True, positions=positions)
+    if cfg.remat_save_attn:
+        from jax.ad_checkpoint import checkpoint_name
+        a = checkpoint_name(a, "attn_out")
+    x = x + a
+    h = rmsnorm(x, lp["norm_mlp"])
+    if cfg.n_experts:
+        y = moe(h, lp["moe"], cfg)
+        if cfg.shared_expert:
+            y = y + mlp(h, lp["mlp"], cfg)
+    else:
+        y = mlp(h, lp["mlp"], cfg)
+    x = x + y
+    return shard(x, "batch", None, None)
+
+
+def backbone(params: Params, x: jax.Array, cfg: ModelConfig,
+             positions: Optional[jax.Array] = None) -> jax.Array:
+    """Embedding-space input -> final-norm output (scan over layer stack)."""
+    block = _remat(functools.partial(_block, cfg=cfg, positions=positions), cfg)
+    x = scan_layers(block, x, params["blocks"], unroll=cfg.unroll_layers)
+    return rmsnorm(x, params["final_norm"])
+
+
+def _inputs_to_embedding(params: Params, batch: Dict[str, jax.Array],
+                         cfg: ModelConfig) -> Tuple[jax.Array, jax.Array, int]:
+    """Returns (x, labels, n_prefix) where n_prefix positions carry no loss
+    (VLM patch embeddings)."""
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(jnp.bfloat16)       # (b, p, d) stub
+        tx = embed(batch["tokens"], params)
+        x = jnp.concatenate([pe, tx], axis=1)
+        return shard(x, "batch", None, None), batch["labels"], pe.shape[1]
+    x = embed(batch["tokens"], params)
+    return x, batch["labels"], 0
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array],
+            cfg: ModelConfig) -> jax.Array:
+    x, labels, n_prefix = _inputs_to_embedding(params, batch, cfg)
+    y = backbone(params, x, cfg)
+    if n_prefix:
+        y = y[:, n_prefix:]
+    return chunked_softmax_xent(y, params["embedding"], labels,
+                                chunk=cfg.loss_chunk,
+                                unroll=cfg.unroll_layers)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+                  long_context: bool = False) -> KVCacheSpec:
+    eff_len = max_len
+    if cfg.sliding_window is not None:
+        eff_len = min(max_len, cfg.sliding_window)   # ring buffer (SWA)
+    return KVCacheSpec(layers=cfg.n_layers, batch=batch, max_len=eff_len,
+                       n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                       dtype_name="int8" if cfg.kv_cache_dtype == "int8"
+                       else "bf16",
+                       seq_axis="seq_full" if long_context else "seq_tp")
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int,
+                       long_context: bool = False) -> Params:
+    return {"kv": kv_cache_spec(cfg, batch, max_len, long_context).specs(),
+            "index": ParamSpec((), jnp.int32, (), init="zeros")}
+
+
+def _decode_block(x, lp, kv_l, index, cfg):
+    h = rmsnorm(x, lp["norm_attn"])
+    a, kv_new = decode_attention(h, lp["attn"], cfg, kv_l, index)
+    x = x + a
+    h = rmsnorm(x, lp["norm_mlp"])
+    if cfg.n_experts:
+        y = moe(h, lp["moe"], cfg)
+        if cfg.shared_expert:
+            y = y + mlp(h, lp["mlp"], cfg)
+    else:
+        y = mlp(h, lp["mlp"], cfg)
+    return x + y, kv_new
+
+
+def decode_step(params: Params, state: Params, tokens: jax.Array,
+                cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    """One decode step: tokens (b, 1) -> (logits (b, V), new state)."""
+    x = embed(tokens, params)
+    index = state["index"]
+
+    def body(carry, layer_in):
+        lp, kv_l = layer_in
+        x = carry
+        x, kv_new = _decode_block(x, lp, kv_l, index, cfg)
+        return x, kv_new
+
+    x, kv = scan_layers(body, x, (params["blocks"], state["kv"]),
+                        unroll=cfg.unroll_layers, collect=True)
+    x = rmsnorm(x, params["final_norm"])
+    logits = logits_last(x, params["embedding"])
+    return logits, {"kv": kv, "index": index + 1}
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            max_len: Optional[int] = None) -> Tuple[jax.Array, Params]:
+    """Process a full prompt, building the KV cache; returns (last-position
+    logits, decode state)."""
+    x, _, _ = _inputs_to_embedding(
+        params, {**batch, "labels": batch.get("labels", batch["tokens"])}, cfg)
+    b, s, _ = x.shape
+    max_len = s if max_len is None else max_len
+    cache_len = kv_cache_spec(cfg, b, max_len).max_len
+    pos = jnp.arange(s)
+
+    # run backbone while capturing per-layer K/V (recomputed projections —
+    # prefill caches built inline to keep the scan carry small)
+    def body(carry, lp):
+        x = carry
+        h = rmsnorm(x, lp["norm_attn"])
+        a, k, v = attention(h, lp["attn"], cfg, causal=True, positions=pos,
+                            return_kv=True)
+        x = x + a
+        h2 = rmsnorm(x, lp["norm_mlp"])
+        if cfg.n_experts:
+            y = moe(h2, lp["moe"], cfg)
+            if cfg.shared_expert:
+                y = y + mlp(h2, lp["mlp"], cfg)
+        else:
+            y = mlp(h2, lp["mlp"], cfg)
+        x = x + y
+        if cache_len < s:                       # SWA ring: keep the tail
+            k = k[:, -cache_len:]
+            v = v[:, -cache_len:]
+        elif cache_len > s:
+            pad = cache_len - s
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if cfg.kv_cache_dtype == "int8":
+            from .layers import _quant_kv
+            kq, ks = _quant_kv(k)
+            vq, vs = _quant_kv(v)
+            return x, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        return x, {"k": k, "v": v}
+
+    x, kv = scan_layers(body, x, params["blocks"],
+                        unroll=cfg.unroll_layers, collect=True)
+    x = rmsnorm(x, params["final_norm"])
+    logits = logits_last(x[:, -1:], params["embedding"])
+    state = {"kv": kv, "index": jnp.int32(s)}
+    return logits, state

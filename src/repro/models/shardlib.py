@@ -1,0 +1,207 @@
+"""Logical-axis sharding: one place that maps model-level axis names onto the
+production mesh (DESIGN.md Sec. 4).
+
+Params and activations carry *logical* axes ("fsdp", "tp", "batch", "seq_tp",
+...).  ``Rules`` resolves them to mesh axes; the same model code then runs on
+the single-pod (16,16) mesh, the multi-pod (2,16,16) mesh, the tiny CPU test
+meshes, or no mesh at all (rules resolve to fully-replicated).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Logical-axis -> mesh-axis mapping."""
+
+    table: Mapping[str, MeshAxes]
+    mesh: Optional[Mesh] = None
+
+    def resolve(self, logical: Sequence[Optional[str]]) -> P:
+        """Logical -> PartitionSpec, de-duplicating mesh axes (first dim that
+        claims an axis wins — needed for layouts like tp2d where 'tp' spans
+        every axis and would otherwise collide with 'batch')."""
+        out = []
+        used: set = set()
+        for name in logical:
+            if name is None:
+                out.append(None)
+                continue
+            if name not in self.table:
+                raise KeyError(f"unknown logical axis {name!r}")
+            axes = self.table[name]
+            if axes is None:
+                out.append(None)
+                continue
+            tup = (axes,) if isinstance(axes, str) else tuple(axes)
+            free = tuple(a for a in tup if a not in used)
+            used.update(free)
+            if not free:
+                out.append(None)
+            elif len(free) == 1:
+                out.append(free[0])
+            else:
+                out.append(free)
+        return P(*out)
+
+    def sharding(self, logical: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.resolve(logical))
+
+
+def single_pod_rules(mesh: Optional[Mesh] = None) -> Rules:
+    """(16, 16) ("data", "model"): DP+FSDP over data, TP over model."""
+    return Rules({
+        "layers": None,
+        "batch": "data",
+        "fsdp": "data",            # ZeRO-style parameter/optimizer sharding
+        "tp": "model",             # heads / ffn / vocab / experts
+        "expert": "model",
+        "seq_tp": "model",         # sequence-sharded KV caches (decode)
+        "seq_full": ("data", "model"),  # long-context single-batch caches
+        "none": None,
+    }, mesh)
+
+
+def multi_pod_rules(mesh: Optional[Mesh] = None) -> Rules:
+    """(2, 16, 16) ("pod", "data", "model"): pod joins the data axis."""
+    return Rules({
+        "layers": None,
+        "batch": ("pod", "data"),
+        "fsdp": ("pod", "data"),
+        "tp": "model",
+        "expert": "model",
+        "seq_tp": "model",
+        "seq_full": ("pod", "data", "model"),
+        "none": None,
+    }, mesh)
+
+
+def replicated_rules() -> Rules:
+    """All logical axes resolve to replication — for CPU tests/smoke runs."""
+    return Rules({k: None for k in ("layers", "batch", "fsdp", "tp", "expert",
+                                    "seq_tp", "seq_full", "none")})
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Rules:
+    return getattr(_STATE, "rules", None) or replicated_rules()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def _axes_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the active rules (no-op when the rules
+    carry no mesh — keeps model code mesh-agnostic).
+
+    Best-effort: dims whose size the mapped mesh axes do not divide are left
+    unconstrained (XLA picks), so alternate layouts like 256-way tp2d can be
+    applied to weights without invalidating every activation hint."""
+    rules = current_rules()
+    if rules.mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"rank mismatch: {logical} vs {x.shape}")
+    spec = rules.resolve(logical)
+    fixed = []
+    for dim, axes in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        size = _axes_size(rules.mesh, axes)
+        fixed.append(axes if size and dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Shape/dtype + logical axes of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    dtype: Any
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"            # "normal" | "zeros" | "ones" | "embed"
+
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def spec_tree_to_structs(tree):
+    return jax.tree.map(lambda s: s.struct(), tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_tree_to_shardings(tree, rules: Rules):
+    return jax.tree.map(lambda s: rules.sharding(s.logical), tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_tree_to_pspecs(tree, rules: Rules):
+    return jax.tree.map(lambda s: rules.resolve(s.logical), tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_param(key: jax.Array, s: ParamSpec) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+    scale = 0.02 if s.init == "embed" else 1.0 / jnp.sqrt(jnp.float32(fan_in))
+    return (jax.random.normal(key, s.shape, jnp.float32) * scale).astype(s.dtype)
+
+
+def init_param_tree(key: jax.Array, tree):
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef,
+                              [init_param(k, s) for k, s in zip(keys, leaves)])
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    total = 0
+    for leaf in leaves:
+        shape = leaf.shape if isinstance(leaf, ParamSpec) else leaf.shape
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,120 @@
+"""Post-SPMD HLO parsing: extract every collective op, its per-device operand
+bytes, replica-group size and modeled wire traffic (ring schedules).
+
+cost_analysis() does not report collective traffic, so the roofline's
+collective term comes from here (spec: "parse as_text() and sum operand sizes
+of every all-gather/all-reduce/reduce-scatter/all-to-all/collective-permute").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\(?[^)=]*?\)?)\s+"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    """Bytes of one 'f32[8,16]' result; tuple types sum their elements."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(first), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int            # per-device result size
+    group: int                   # replica-group participants
+    line: str
+
+    @property
+    def operand_bytes(self) -> int:
+        """Per-device operand (input) size."""
+        if self.kind == "all-gather":
+            return max(self.result_bytes // max(self.group, 1), 1)
+        if self.kind == "reduce-scatter":
+            return self.result_bytes * self.group
+        return self.result_bytes
+
+    @property
+    def wire_bytes(self) -> int:
+        """Ring-schedule traffic in/out of one chip."""
+        g = max(self.group, 1)
+        if self.kind == "all-reduce":
+            return int(2 * self.result_bytes * (g - 1) / g)
+        if self.kind == "all-gather":
+            return int(self.result_bytes * (g - 1) / g)
+        if self.kind == "reduce-scatter":
+            return int(self.operand_bytes * (g - 1) / g)
+        if self.kind == "all-to-all":
+            return int(self.result_bytes * (g - 1) / g)
+        return self.result_bytes     # collective-permute: one hop
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    out: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2).replace("-start", "")
+        res = _shape_bytes(m.group(1))
+        out.append(CollectiveOp(kind=kind, result_bytes=res,
+                                group=_group_size(line), line=line.strip()))
+    return out
+
+
+def summarize_collectives(ops: List[CollectiveOp]) -> Dict[str, Dict[str, int]]:
+    summary: Dict[str, Dict[str, int]] = {}
+    for op in ops:
+        s = summary.setdefault(op.kind, {"count": 0, "operand_bytes": 0,
+                                         "wire_bytes": 0})
+        s["count"] += 1
+        s["operand_bytes"] += op.operand_bytes
+        s["wire_bytes"] += op.wire_bytes
+    return summary
+
+
+def total_collective_bytes(ops: List[CollectiveOp]) -> Tuple[int, int]:
+    """(sum of per-device operand bytes, sum of modeled wire bytes)."""
+    return (sum(o.operand_bytes for o in ops),
+            sum(o.wire_bytes for o in ops))

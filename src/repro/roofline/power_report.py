@@ -1,0 +1,113 @@
+"""Paper-technique power report for every dry-run cell (DESIGN.md Sec. 2c).
+
+The dry-run's MODEL_FLOPS are converted to MAC counts and 'executed' on the
+paper's virtual partitioned systolic arrays: a v5e chip is modeled as
+4 x (128 x 128) MAC grids; the paper's flow (slack model -> DBSCAN clusters
+-> Algorithm 1 -> Algorithm 2 calibration) assigns per-partition rail
+voltages, and the calibrated PowerModel turns MAC counts into energy — with
+and without voltage scaling, plus the beyond-paper precision-island variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from ..configs import ARCHS, SHAPES, cell_is_runnable, get_config
+from ..core import run_flow, model_for
+from ..core.precision import ENERGY_PER_MAC, TIERS
+from .analytic import model_flops
+
+ART = Path(__file__).resolve().parents[3] / "artifacts"
+
+MXU_GRIDS_PER_CHIP = 4
+MXU_N = 128
+
+
+@dataclasses.dataclass
+class PowerRow:
+    arch: str
+    shape: str
+    macs: float
+    baseline_j: float                 # all partitions at nominal V
+    static_j: float                   # Algorithm-1 voltages
+    runtime_j: float                  # Algorithm-2 calibrated voltages
+    precision_j: float                # beyond-paper int4/int8/bf16 islands
+    static_saving_pct: float
+    runtime_saving_pct: float
+    precision_saving_pct: float
+
+
+_FLOW_CACHE: Dict[str, object] = {}
+
+
+def _flow(tech: str = "vtr-22nm"):
+    if tech not in _FLOW_CACHE:
+        # one 128x128 virtual array per MXU; paper flow with DBSCAN
+        _FLOW_CACHE[tech] = run_flow(array_n=64, tech=tech, algo="dbscan",
+                                     seed=2021, max_trials=24)
+    return _FLOW_CACHE[tech]
+
+
+def power_row(arch: str, shape_name: str, tech: str = "vtr-22nm") -> PowerRow:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    macs = model_flops(cfg, shape) / 2.0
+    flow = _flow(tech)
+    pm = model_for(tech)
+    n_part = flow.n_partitions
+    frac = np.bincount(flow.labels, minlength=n_part) / flow.labels.size
+
+    nominal_v = [pm.tech.v_nom] * n_part
+    base = pm.macs_energy_j(macs, nominal_v, frac)
+    static = pm.macs_energy_j(macs, flow.static_v, frac)
+    runtime = pm.macs_energy_j(macs, flow.runtime_v, frac)
+    # beyond-paper: precision islands using the same cluster fractions;
+    # cheapest tier on the highest-slack cluster
+    tier_energy = np.array([ENERGY_PER_MAC[TIERS[min(i, len(TIERS) - 1)]]
+                            for i in range(n_part)])
+    precision = float(base * np.sum(frac * tier_energy))
+    return PowerRow(
+        arch=arch, shape=shape_name, macs=macs,
+        baseline_j=base, static_j=static, runtime_j=runtime,
+        precision_j=precision,
+        static_saving_pct=100 * (1 - static / base),
+        runtime_saving_pct=100 * (1 - runtime / base),
+        precision_saving_pct=100 * (1 - precision / base),
+    )
+
+
+def all_rows(tech: str = "vtr-22nm") -> List[PowerRow]:
+    out = []
+    for arch in ARCHS:
+        for shape_name, shape in SHAPES.items():
+            ok, _ = cell_is_runnable(get_config(arch), shape)
+            if ok:
+                out.append(power_row(arch, shape_name, tech))
+    return out
+
+
+def render_markdown(rows: List[PowerRow]) -> str:
+    hdr = ("| arch | shape | MACs | baseline J | static J | runtime J | "
+           "precision J | runtime saving | precision saving |")
+    out = [hdr, "|" + "---|" * 9]
+    for r in rows:
+        out.append(f"| {r.arch} | {r.shape} | {r.macs:.2e} | "
+                   f"{r.baseline_j:.3g} | {r.static_j:.3g} | "
+                   f"{r.runtime_j:.3g} | {r.precision_j:.3g} | "
+                   f"{r.runtime_saving_pct:.1f}% | "
+                   f"{r.precision_saving_pct:.1f}% |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    rows = all_rows()
+    print(render_markdown(rows))
+
+
+if __name__ == "__main__":
+    main()

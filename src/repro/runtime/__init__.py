@@ -1,0 +1,3 @@
+"""Fault tolerance: heartbeats, straggler detection, elastic remapping."""
+from .monitor import (ElasticPlan, HeartbeatMonitor, HostState,
+                      StragglerReport, plan_elastic_remap)

@@ -1,0 +1,127 @@
+"""Fault tolerance for 1000+-node runs: heartbeats, straggler detection and
+elastic remapping (DESIGN.md Sec. 7).  On this CPU container the hosts are
+simulated; the *logic* (what production agents would execute) is real and
+fully tested with injected failures.
+
+Control flow at scale:
+  * every host heartbeats each step; the monitor marks a host dead after
+    ``timeout_steps`` silent steps;
+  * per-step durations feed a robust z-score; persistent outliers are flagged
+    as stragglers (candidates for preemptive replacement);
+  * on failure, ``ElasticPlan`` recomputes the largest usable mesh from the
+    survivors, remaps data shards, and the trainer restores the last
+    checkpoint (the deterministic data pipeline replays exactly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_beat_step: int = -1
+    durations: List[float] = dataclasses.field(default_factory=list)
+    alive: bool = True
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    host_id: int
+    z_score: float
+    median_s: float
+    host_s: float
+
+
+class HeartbeatMonitor:
+    def __init__(self, num_hosts: int, timeout_steps: int = 3,
+                 straggler_z: float = 3.0, straggler_patience: int = 3,
+                 window: int = 16):
+        self.hosts = {h: HostState(h) for h in range(num_hosts)}
+        self.timeout_steps = timeout_steps
+        self.straggler_z = straggler_z
+        self.straggler_patience = straggler_patience
+        self.window = window
+        self._flag_counts: Dict[int, int] = {}
+
+    def beat(self, host_id: int, step: int, duration_s: float) -> None:
+        h = self.hosts[host_id]
+        h.last_beat_step = step
+        h.durations.append(duration_s)
+        if len(h.durations) > self.window:
+            h.durations.pop(0)
+
+    def check_dead(self, step: int) -> List[int]:
+        """Hosts that missed ``timeout_steps`` consecutive heartbeats."""
+        dead = []
+        for h in self.hosts.values():
+            if h.alive and step - h.last_beat_step > self.timeout_steps:
+                h.alive = False
+                dead.append(h.host_id)
+        return dead
+
+    def stragglers(self) -> List[StragglerReport]:
+        """Hosts whose recent step time is a persistent robust outlier."""
+        live = [h for h in self.hosts.values() if h.alive and h.durations]
+        if len(live) < 3:
+            return []
+        recents = {h.host_id: sum(h.durations[-4:]) / len(h.durations[-4:])
+                   for h in live}
+        vals = sorted(recents.values())
+        med = vals[len(vals) // 2]
+        mad = sorted(abs(v - med) for v in vals)[len(vals) // 2] or 1e-9
+        out = []
+        for hid, v in recents.items():
+            z = 0.6745 * (v - med) / mad
+            if z > self.straggler_z:
+                self._flag_counts[hid] = self._flag_counts.get(hid, 0) + 1
+                if self._flag_counts[hid] >= self.straggler_patience:
+                    out.append(StragglerReport(hid, z, med, v))
+            else:
+                self._flag_counts[hid] = 0
+        return out
+
+    def alive_hosts(self) -> List[int]:
+        return [h.host_id for h in self.hosts.values() if h.alive]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Result of an elastic remap: the new mesh shape and shard assignment."""
+
+    data_parallel: int                  # new size of the data axis
+    model_parallel: int                 # unchanged (TP groups must be whole)
+    host_to_shard: Dict[int, int]
+    dropped_hosts: Tuple[int, ...]
+
+    @property
+    def world(self) -> int:
+        return self.data_parallel * self.model_parallel
+
+
+def plan_elastic_remap(alive: Sequence[int], model_parallel: int,
+                       hosts_per_dp_group: int = 1) -> ElasticPlan:
+    """Largest data-parallel width that the surviving hosts can populate.
+
+    TP groups are atomic (a dead host kills its whole model-parallel group);
+    the data axis shrinks to the number of complete surviving groups.  At
+    least one complete group must survive.
+    """
+    groups: Dict[int, List[int]] = {}
+    for h in alive:
+        groups.setdefault(h // hosts_per_dp_group, []).append(h)
+    complete = [g for g, members in sorted(groups.items())
+                if len(members) == hosts_per_dp_group]
+    if not complete:
+        raise RuntimeError("no complete model-parallel group survives")
+    dp = len(complete)
+    mapping = {}
+    for shard, g in enumerate(complete):
+        for h in sorted(groups[g]):
+            mapping[h] = shard
+    dropped = tuple(h for h in alive if h not in mapping)
+    return ElasticPlan(data_parallel=dp, model_parallel=model_parallel,
+                       host_to_shard=mapping, dropped_hosts=dropped)

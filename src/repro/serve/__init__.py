@@ -1,0 +1,2 @@
+"""Batched serving engine (continuous batching, fixed decode slots)."""
+from .engine import EngineStats, Request, ServeEngine

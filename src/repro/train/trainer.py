@@ -1,0 +1,134 @@
+"""Training loop: step builder + data pipeline + checkpointing + fault
+tolerance, usable from CPU smoke scale to the production mesh.
+
+The loop is deliberately restart-oriented: all state lives in
+(params, opt_state, step); the data pipeline is stateless in `step`; a crash
+at any point resumes bit-identically from the last checkpoint (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import optim
+from ..checkpoint.manager import CheckpointManager
+from ..configs.base import ModelConfig, ShapeConfig
+from ..data.pipeline import DataConfig, PrefetchLoader, SyntheticDataset
+from ..models import model_api
+from ..models.shardlib import Rules, replicated_rules, use_rules
+from ..runtime.monitor import HeartbeatMonitor
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    async_checkpoint: bool = True
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: List[float]
+    steps_done: int
+    final_params: Pytree
+    final_opt_state: Pytree
+    wall_s: float
+
+
+def make_train_step(api, cfg: ModelConfig, opt_cfg: optim.AdamWConfig,
+                    rules: Optional[Rules] = None, donate: bool = True):
+    rules = rules or replicated_rules()
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules):
+            loss, grads = jax.value_and_grad(api.loss)(params, batch)
+            params, opt_state = optim.apply_updates(params, opt_state, grads,
+                                                    opt_cfg)
+        return params, opt_state, loss
+
+    return jax.jit(train_step, donate_argnums=(0, 1) if donate else ())
+
+
+def train(cfg: ModelConfig, shape: ShapeConfig,
+          train_cfg: Optional[TrainConfig] = None,
+          opt_cfg: Optional[optim.AdamWConfig] = None,
+          rules: Optional[Rules] = None,
+          monitor: Optional[HeartbeatMonitor] = None,
+          resume: bool = False) -> TrainResult:
+    train_cfg = train_cfg or TrainConfig()
+    opt_cfg = opt_cfg or optim.AdamWConfig(total_steps=train_cfg.steps)
+    api = model_api(cfg)
+
+    params = api.init_params(jax.random.PRNGKey(train_cfg.seed))
+    opt_state = optim.init_state(params, opt_cfg)
+    start_step = 0
+
+    ckpt = None
+    if train_cfg.checkpoint_dir:
+        ckpt = CheckpointManager(train_cfg.checkpoint_dir)
+        if resume and ckpt.latest_step() is not None:
+            state = ckpt.restore({"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            params = jax.tree.map(jnp.asarray, params)
+            opt_state = jax.tree.map(jnp.asarray, opt_state)
+            start_step = ckpt.latest_step()
+
+    data_cfg = DataConfig(
+        vocab_size=cfg.padded_vocab, seq_len=shape.seq_len,
+        global_batch=shape.global_batch, seed=train_cfg.seed,
+        mean_doc_len=max(shape.seq_len // 8, 8),   # learnable unigram signal
+        frontend=cfg.frontend, frontend_tokens=cfg.frontend_tokens,
+        d_model=cfg.d_model, enc_frames_ratio=cfg.enc_frames_ratio)
+    dataset = SyntheticDataset(data_cfg)
+    loader = PrefetchLoader(dataset, start_step=start_step)
+
+    step_fn = make_train_step(api, cfg, opt_cfg, rules)
+
+    losses: List[float] = []
+    t0 = time.time()
+    step = start_step
+    try:
+        for step in range(start_step, train_cfg.steps):
+            batch_np = next(loader)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.data.items()}
+            if cfg.frontend == "vision":
+                # trim text to leave room for the patch prefix
+                p = min(cfg.frontend_tokens, shape.seq_len // 2)
+                batch["patch_embeds"] = batch["patch_embeds"][:, :p].astype(
+                    jnp.bfloat16)
+                batch["tokens"] = batch["tokens"][:, :shape.seq_len - p]
+                batch["labels"] = batch["labels"][:, :shape.seq_len - p]
+            t_step = time.time()
+            params, opt_state, loss = step_fn(params, opt_state, batch)
+            loss_f = float(loss)
+            losses.append(loss_f)
+            if monitor is not None:
+                monitor.beat(0, step, time.time() - t_step)
+            if not np.isfinite(loss_f):
+                raise FloatingPointError(f"loss diverged at step {step}")
+            if train_cfg.log_every and step % train_cfg.log_every == 0:
+                print(f"step {step:5d} loss {loss_f:.4f} "
+                      f"({time.time() - t_step:.2f}s)")
+            if (ckpt and train_cfg.checkpoint_every
+                    and (step + 1) % train_cfg.checkpoint_every == 0):
+                ckpt.save(step + 1, {"params": params, "opt": opt_state},
+                          blocking=not train_cfg.async_checkpoint)
+    finally:
+        loader.close()
+        if ckpt:
+            ckpt.wait()
+
+    return TrainResult(losses=losses, steps_done=step + 1 - start_step,
+                       final_params=params, final_opt_state=opt_state,
+                       wall_s=time.time() - t0)

@@ -1,0 +1,124 @@
+"""End-to-end CAD flow (paper Fig. 9) + partition/constraint artifacts."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Floorplan, grid_floorplan, paper_table2_flow,
+                        partition_min_slack, quadrant_floorplan, run_flow,
+                        TimingModel)
+from repro.core.constraints import generate_sdc, generate_xdc, mac_cell_name
+
+
+@pytest.fixture(scope="module")
+def flow16():
+    return run_flow(array_n=16, tech="vivado-28nm", algo="dbscan", seed=2021)
+
+
+def test_flow_reproduces_table2_guardband(flow16):
+    """Static scheme on the 16x16 Artix-7 array: paper reports 6.37%."""
+    assert flow16.n_partitions == 4
+    assert flow16.static_reduction_pct == pytest.approx(6.37, abs=0.8)
+    np.testing.assert_allclose(np.round(flow16.static_v, 2),
+                               [0.96, 0.97, 0.98, 0.99])
+
+
+def test_flow_runtime_beats_static_in_guardband(flow16):
+    """Guard band has no timing failures (paper: 100% accuracy region), so the
+    runtime scheme anneals every rail to the floor -> more savings than
+    static.  This is the 'lower bound' headroom the paper points at."""
+    assert flow16.calibrated_fail_free
+    assert flow16.runtime_reduction_pct > flow16.static_reduction_pct
+    assert (flow16.runtime_v >= 0.95 - 1e-9).all()
+
+
+def test_flow_all_algorithms_agree_on_bands():
+    reds = {}
+    for algo in ("kmeans", "hierarchical", "meanshift", "dbscan"):
+        r = run_flow(array_n=16, algo=algo, seed=2021)
+        assert r.n_partitions == 4
+        reds[algo] = r.static_reduction_pct
+    assert max(reds.values()) - min(reds.values()) < 0.5
+
+
+def test_flow_critical_region_safety():
+    """In the VTR critical region the static scheme under-volts the
+    highest-slack partition below its min-safe voltage; runtime calibration
+    must end fail-free with voltages at/above static's unsafe rail."""
+    r = run_flow(array_n=16, tech="vtr-22nm", algo="dbscan", seed=2021)
+    assert r.calibrated_fail_free
+    tm = TimingModel(n=16, tech=r.floorplan.partitions and
+                     __import__("repro.core", fromlist=["TECH_NODES"]).TECH_NODES["vtr-22nm"],
+                     seed=2021)
+    min_safe = tm.min_safe_voltage().reshape(-1)
+    for p in r.floorplan.partitions:
+        part_safe = min_safe[list(p.mac_ids)].max()
+        assert r.runtime_v[p.index] >= part_safe - 1e-6
+
+
+def test_paper_table2_flow_helper():
+    out = paper_table2_flow(16, "vivado-28nm")
+    assert out["baseline_mw"] == pytest.approx(408.0)
+    assert out["reduction_pct"] == pytest.approx(6.55, abs=0.1)
+
+
+def test_flow_report_artifacts(flow16):
+    assert "create_pblock" in flow16.xdc
+    assert "create_clock" in flow16.xdc and "create_clock" in flow16.sdc
+    assert flow16.xdc.count("create_pblock") == flow16.n_partitions
+    assert flow16.labels.shape == (256,)
+    assert flow16.min_slack.shape == (256,)
+
+
+# ------------------------------------------------------------ floorplans ----
+
+def test_quadrant_floorplan_covers_all_macs():
+    fp = quadrant_floorplan(16)
+    part = fp.partition_of_mac()
+    assert part.shape == (256,)
+    np.testing.assert_array_equal(np.bincount(part), [64, 64, 64, 64])
+    # Fig. 8 geometry: MAC (0,0) in partition 0 (top-left), (15,15) in 3
+    assert part[0] == 0 and part[255] == 3
+    assert part[15] == 1 and part[240] == 2
+
+
+def test_grid_floorplan_proportional_rows():
+    labels = np.repeat([0, 1], [192, 64])
+    fp = grid_floorplan(labels, 16)
+    sizes = [p.n_macs for p in fp.partitions]
+    assert sizes == [192, 64]
+    part = fp.partition_of_mac()
+    np.testing.assert_array_equal(part, labels)
+
+
+def test_grid_floorplan_rejects_noise():
+    labels = np.zeros(256, dtype=np.int64)
+    labels[0] = -1
+    with pytest.raises(ValueError):
+        grid_floorplan(labels, 16)
+
+
+def test_voltage_map_matches_partitions():
+    fp = quadrant_floorplan(16).with_voltages([0.96, 0.97, 0.98, 0.99])
+    vm = fp.voltage_map()
+    assert vm.shape == (16, 16)
+    assert vm[0, 0] == 0.96 and vm[0, 15] == 0.97
+    assert vm[15, 0] == 0.98 and vm[15, 15] == 0.99
+
+
+def test_partition_min_slack():
+    slack = np.arange(256, dtype=float)
+    labels = np.repeat([0, 1, 2, 3], 64)
+    np.testing.assert_array_equal(partition_min_slack(labels, slack),
+                                  [0.0, 64.0, 128.0, 192.0])
+
+
+def test_xdc_sdc_generation():
+    fp = quadrant_floorplan(16).with_voltages([0.96, 0.97, 0.98, 0.99])
+    xdc = generate_xdc(fp, clock_ns=10.0)
+    assert xdc.count("create_pblock") == 4
+    assert "SLICE_X" in xdc
+    assert mac_cell_name(0, 16) == "GEN_REG_I[0].GEN_REG_J[0].uut"
+    assert mac_cell_name(17, 16) == "GEN_REG_I[1].GEN_REG_J[1].uut"
+    sdc = generate_sdc(fp)
+    assert "create_clock -period 10.000 clk" in sdc
+    assert sdc.count("partition-") == 4

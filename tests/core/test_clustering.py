@@ -1,0 +1,170 @@
+"""Unit + property tests for the four from-scratch clustering algorithms."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (attach_noise_to_nearest, cluster, dbscan, hierarchical,
+                        hierarchical_dendrogram, kmeans, meanshift,
+                        relabel_by_feature_mean, silhouette, TimingModel)
+
+
+@pytest.fixture(scope="module")
+def slack16():
+    return TimingModel(n=16, seed=2021).min_slack_flat()
+
+
+def _well_separated(rng, k=4, per=40, gap=10.0):
+    return np.concatenate([rng.normal(i * gap, 0.3, per) for i in range(k)])
+
+
+# ---------------------------------------------------------------- k-means ----
+
+def test_kmeans_recovers_separated_clusters():
+    x = _well_separated(np.random.default_rng(0))
+    lab = kmeans(x, 4, seed=1)
+    assert len(set(lab)) == 4
+    for c in range(4):
+        assert len(set(lab[c * 40:(c + 1) * 40])) == 1     # band purity
+
+
+def test_kmeans_on_paper_slacks(slack16):
+    lab, centers = kmeans(slack16, 4, seed=0, return_centers=True)
+    sizes = np.bincount(lab)
+    assert sizes.shape == (4,) and (np.abs(sizes - 64) <= 8).all()
+
+
+def test_kmeans_deterministic(slack16):
+    a = kmeans(slack16, 4, seed=3)
+    b = kmeans(slack16, 4, seed=3)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_kmeans_assigns_to_nearest_center(slack16):
+    lab, centers = kmeans(slack16, 4, seed=0, return_centers=True)
+    d = np.abs(slack16[:, None] - centers.T[0][None, :])
+    np.testing.assert_array_equal(lab, np.argmin(d, axis=1))
+
+
+# ----------------------------------------------------------- hierarchical ----
+
+def test_hierarchical_dendrogram_monotone(slack16):
+    dg = hierarchical_dendrogram(slack16, linkage="average")
+    # average-linkage heights are not strictly monotone in general, but the
+    # final (most dissimilar) merges must dominate (paper Fig. 10)
+    assert dg.height[-1] == max(dg.height)
+    assert dg.height[-1] > 3 * np.median(dg.height)
+
+
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_hierarchical_cut_sizes(slack16, k):
+    lab = hierarchical(slack16, k)
+    assert len(set(lab)) == k
+    assert len(lab) == 256
+
+
+def test_hierarchical_separated():
+    x = _well_separated(np.random.default_rng(1))
+    lab = hierarchical(x, 4, linkage="single")
+    assert len(set(lab)) == 4
+    for c in range(4):
+        assert len(set(lab[c * 40:(c + 1) * 40])) == 1
+
+
+# ------------------------------------------------------------- mean-shift ----
+
+def test_meanshift_paper_radius_four_clusters(slack16):
+    spread = slack16.max() - slack16.min()
+    lab = meanshift(slack16, bandwidth=0.17 * spread)
+    assert len(set(lab)) == 4                     # paper Fig. 13: 4 clusters
+    assert (np.bincount(lab) == 64).all()         # equal row bands
+
+
+def test_meanshift_single_blob():
+    x = np.random.default_rng(2).normal(0, 0.1, 100)
+    assert len(set(meanshift(x, bandwidth=1.0))) == 1
+
+
+# ----------------------------------------------------------------- dbscan ----
+
+def test_dbscan_paper_slacks(slack16):
+    spread = slack16.max() - slack16.min()
+    lab = dbscan(slack16, eps=spread / 12, min_pts=8)
+    assert len(set(lab) - {-1}) == 4              # paper Fig. 14
+    assert (lab == -1).mean() < 0.05
+
+
+def test_dbscan_identifies_outliers():
+    x = np.concatenate([np.zeros(50), np.ones(50), [10.0]])
+    lab = dbscan(x, eps=0.2, min_pts=5)
+    assert lab[-1] == -1                          # the paper's key DBSCAN win
+    assert len(set(lab) - {-1}) == 2
+
+
+def test_attach_noise(slack16):
+    x = np.concatenate([np.zeros(50), np.ones(50), [10.0]])
+    lab = attach_noise_to_nearest(x, dbscan(x, eps=0.2, min_pts=5))
+    assert (lab >= 0).all()
+    assert lab[-1] == lab[50]                     # joined the nearest (=1) blob
+
+
+# ------------------------------------------------------------- shared/API ----
+
+def test_cluster_dispatch(slack16):
+    assert len(cluster(slack16, "kmeans", k=3, seed=0)) == 256
+    assert len(cluster(slack16, "dbscan", eps=0.1, min_pts=4)) == 256
+    with pytest.raises(ValueError):
+        cluster(slack16, "qmeans")
+
+
+def test_relabel_by_feature_mean(slack16):
+    lab = relabel_by_feature_mean(slack16, kmeans(slack16, 4, seed=0))
+    means = [slack16[lab == c].mean() for c in range(4)]
+    assert means == sorted(means, reverse=True)   # cluster 0 = highest slack
+
+
+def test_silhouette_ranks_good_clustering_higher(slack16):
+    good = kmeans(slack16, 4, seed=0)
+    bad = np.arange(256) % 4                       # interleaved nonsense
+    assert silhouette(slack16, good) > 0.5 > silhouette(slack16, bad)
+
+
+# ------------------------------------------------------------- properties ----
+
+@st.composite
+def float_arrays(draw):
+    n = draw(st.integers(8, 60))
+    return np.array(draw(st.lists(
+        st.floats(-100, 100, allow_nan=False, width=32), min_size=n, max_size=n)))
+
+
+@given(float_arrays(), st.integers(1, 5), st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_kmeans_partitions_everything(x, k, seed):
+    lab = kmeans(x, k, seed=seed)
+    assert lab.shape == x.shape
+    assert ((lab >= 0) & (lab < max(k, len(x)))).all()
+
+
+@given(float_arrays(), st.floats(0.05, 5.0), st.integers(2, 6))
+@settings(max_examples=40, deadline=None)
+def test_dbscan_core_points_never_noise(x, eps, min_pts):
+    lab = dbscan(x, eps=eps, min_pts=min_pts)
+    d = np.abs(x[:, None] - x[None, :])
+    core = (d <= eps).sum(1) >= min_pts
+    assert (lab[core] >= 0).all()
+
+
+@given(float_arrays(), st.integers(2, 5))
+@settings(max_examples=30, deadline=None)
+def test_hierarchical_cut_produces_k_clusters(x, k):
+    k = min(k, len(x))
+    lab = hierarchical(x, k)
+    assert len(set(lab)) == k
+
+
+@given(float_arrays())
+@settings(max_examples=30, deadline=None)
+def test_meanshift_labels_cover_all(x):
+    lab = meanshift(x, bandwidth=max(1e-3, (x.max() - x.min()) / 5 + 1e-3))
+    assert (lab >= 0).all() and lab.shape == x.shape

@@ -1,0 +1,64 @@
+"""Precision-island controller (TPU analogue of the voltage schemes)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ENERGY_PER_MAC, TIERS, PrecisionController, energy_ratio,
+                        static_tier_assignment, tile_headroom)
+
+
+def test_tile_headroom_shape_and_ordering():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(256, 256)).astype(np.float32)
+    # a tile with huge outliers quantizes poorly -> lower headroom
+    w2 = w.copy()
+    w2[:128, :128] *= 1.0
+    w2[0, 0] = 500.0
+    h = tile_headroom(w2, tile=128)
+    assert h.shape == (2, 2)
+    assert h[0, 0] < h[1, 1]
+
+
+def test_static_assignment_bands():
+    h = np.array([[3.0, 2.0], [1.0, 0.0]])
+    t = static_tier_assignment(h, n_tiers=3)
+    assert t[0, 0] == 0            # highest headroom -> cheapest tier (int4)
+    assert t[1, 1] == 2            # lowest headroom -> bf16
+    assert t.min() >= 0 and t.max() <= 2
+
+
+def test_static_assignment_uniform_headroom():
+    t = static_tier_assignment(np.full((4, 4), 2.5))
+    assert (t == 0).all()
+
+
+def test_controller_step_is_algorithm2_on_tiers():
+    c = PrecisionController()
+    t = np.array([0, 1, 2, 1])
+    nt = c.step(t, np.array([True, False, False, True]))
+    np.testing.assert_array_equal(nt, [1, 0, 1, 2])
+
+
+def test_controller_calibrates_to_cheapest_clean_tier():
+    # oracle: tile i needs at least tier need[i]
+    need = np.array([0, 1, 2, 0, 1])
+
+    def trial(t):
+        return t < need
+
+    c = PrecisionController()
+    out = c.calibrate(np.full(5, 2), trial)
+    np.testing.assert_array_equal(out, need)
+
+
+def test_energy_ratio():
+    assert energy_ratio(np.array([2, 2, 2])) == pytest.approx(1.0)
+    assert energy_ratio(np.array([0, 0])) == pytest.approx(ENERGY_PER_MAC["int4"])
+    mixed = energy_ratio(np.array([0, 2]))
+    assert ENERGY_PER_MAC["int4"] < mixed < 1.0
+
+
+def test_tiers_ordered_cheapest_first():
+    assert TIERS == ("int4", "int8", "bf16")
+    assert (ENERGY_PER_MAC["int4"] < ENERGY_PER_MAC["int8"]
+            < ENERGY_PER_MAC["bf16"])

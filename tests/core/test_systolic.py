@@ -1,0 +1,106 @@
+"""Partitioned systolic-array simulator with voltage-dependent faults."""
+
+import numpy as np
+import pytest
+
+from repro.core import (RazorConfig, SystolicSim, TimingModel, TECH_NODES,
+                        fast_fault_matmul, quadrant_floorplan)
+
+
+@pytest.fixture(scope="module")
+def sim16():
+    tm = TimingModel(n=16, tech=TECH_NODES["vtr-22nm"], seed=2021)
+    fp = quadrant_floorplan(16).with_voltages([1.0, 1.0, 1.0, 1.0])
+    return SystolicSim(tm, fp, RazorConfig(clock_ns=10.0))
+
+
+def test_exact_matmul_at_nominal_voltage(sim16):
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(24, 16))
+    w = rng.normal(size=(16, 16))
+    c, stats = sim16.matmul(a, w)
+    np.testing.assert_allclose(c, a @ w, rtol=1e-12)
+    assert stats.rel_error < 1e-12          # only fp association-order noise
+    assert stats.replay_cycles == 0
+    assert not stats.partition_fail.any()
+    assert stats.silent.sum() == 0
+
+
+def test_low_voltage_detected_errors_are_corrected(sim16):
+    """In the detection window Razor corrects values: product stays exact but
+    replay cycles accumulate (the paper's runtime-failure signal)."""
+    tm = sim16.timing
+    # pick a voltage where worst delay lands inside (T, T + T_del]
+    v = float(tm.min_safe_voltage().max()) - 0.012
+    fp = quadrant_floorplan(16).with_voltages([v] * 4)
+    rng = np.random.default_rng(1)
+    a, w = rng.normal(size=(32, 16)), rng.normal(size=(16, 16))
+    c, stats = SystolicSim(tm, fp, sim16.razor).matmul(a, w)
+    assert stats.replay_cycles > 0
+    assert stats.partition_fail.any()
+    if stats.silent.sum() == 0:
+        np.testing.assert_allclose(c, a @ w, rtol=1e-12)
+
+
+def test_crash_voltage_silent_corruption(sim16):
+    """Deep in the crash region arrivals exceed the shadow window: silent
+    corruption, non-zero relative error (paper Fig. 7: accuracy -> 0)."""
+    tm = sim16.timing
+    fp = quadrant_floorplan(16).with_voltages([0.55] * 4)
+    rng = np.random.default_rng(2)
+    a, w = rng.normal(size=(32, 16)), rng.normal(size=(16, 16))
+    c, stats = SystolicSim(tm, fp, sim16.razor).matmul(a, w)
+    assert stats.silent.sum() > 0
+    assert stats.rel_error > 0.05
+
+
+def test_per_partition_voltages_differentiate(sim16):
+    """Only the under-volted partition's MACs should fail."""
+    tm = sim16.timing
+    v_hot = float(tm.min_safe_voltage().max()) - 0.012
+    fp = quadrant_floorplan(16).with_voltages([1.0, 1.0, v_hot, v_hot])
+    rng = np.random.default_rng(3)
+    a, w = rng.normal(size=(32, 16)), rng.normal(size=(16, 16))
+    _, stats = SystolicSim(tm, fp, sim16.razor).matmul(a, w)
+    det = stats.detected + stats.silent
+    assert det[:8].sum() == 0                # top quadrants at nominal: clean
+    assert det[8:].sum() > 0                 # bottom quadrants under-volted
+
+
+def test_trial_run_flags_match_partitions(sim16):
+    tm = sim16.timing
+    flags_nominal = sim16.trial_run(np.array([1.0] * 4), seed=0)
+    assert not flags_nominal.any()
+    v_hot = float(tm.min_safe_voltage().max()) - 0.012
+    flags_hot = sim16.trial_run(np.array([1.0, 1.0, 1.0, v_hot]), seed=0)
+    assert flags_hot[3] and not flags_hot[:3].any()
+
+
+def test_fast_fault_matmul_modes():
+    rng = np.random.default_rng(4)
+    a, w = rng.normal(size=(8, 16)), rng.normal(size=(16, 16))
+    none = fast_fault_matmul(a, w, np.zeros((16, 16), bool))
+    np.testing.assert_allclose(none, a @ w)
+    mask = np.zeros((16, 16), bool)
+    mask[0, 0] = True
+    dropped = fast_fault_matmul(a, w, mask, mode="drop")
+    expect = a @ w - np.outer(a[:, 0], np.eye(16)[0] * w[0, 0])
+    np.testing.assert_allclose(dropped, expect)
+
+
+def test_activity_dependence():
+    """Constant inputs toggle no bits -> fewer failures than noisy inputs at
+    the same marginal voltage (the paper's NTC observation)."""
+    tm = TimingModel(n=16, tech=TECH_NODES["vtr-22nm"], seed=5)
+    v = float(tm.min_safe_voltage().max()) - 0.002
+    fp = quadrant_floorplan(16).with_voltages([v] * 4)
+    sim = SystolicSim(tm, fp, RazorConfig(clock_ns=10.0))
+    rng = np.random.default_rng(6)
+    w = rng.normal(size=(16, 16))
+    a_const = np.ones((32, 16))
+    a_noisy = rng.normal(size=(32, 16))
+    _, s_const = sim.matmul(a_const, w)
+    _, s_noisy = sim.matmul(a_noisy, w)
+    total_const = s_const.detected.sum() + s_const.silent.sum()
+    total_noisy = s_noisy.detected.sum() + s_noisy.silent.sum()
+    assert total_noisy > total_const

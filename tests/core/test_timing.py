@@ -1,0 +1,97 @@
+"""Timing-model calibration against the paper's Table I and Figs. 4/5."""
+
+import numpy as np
+import pytest
+
+from repro.core import TECH_NODES, TimingModel, delay_scale, render_report_table
+
+
+@pytest.fixture(scope="module")
+def tm16():
+    return TimingModel(n=16, seed=2021)
+
+
+def test_table1_worst_path_statistics(tm16):
+    """Worst 100 setup paths must match Table I's ranges (100 MHz, Artix-7)."""
+    rep = tm16.report(100)
+    slacks = np.array([p.slack_ns for p in rep])
+    totals = np.array([p.total_delay_ns for p in rep])
+    logics = np.array([p.logic_delay_ns for p in rep])
+    nets = np.array([p.net_delay_ns for p in rep])
+    assert 5.2 <= slacks.min() <= 5.6            # paper: 5.34
+    assert 4.0 <= totals.max() <= 4.6            # paper: 4.40
+    assert 2.4 <= logics.max() <= 3.1            # paper: 2.89
+    assert 1.3 <= nets.max() <= 1.7              # paper: 1.57
+    assert all(p.requirement_ns == 10.0 for p in rep)
+    # slack consistent with delay + uncertainty
+    np.testing.assert_allclose(slacks + totals, 10.0 - 0.25, atol=0.02)
+
+
+def test_report_paths_sorted_worst_first(tm16):
+    rep = tm16.report(50)
+    slacks = [p.slack_ns for p in rep]
+    assert slacks == sorted(slacks)
+
+
+def test_bottom_rows_have_less_slack(tm16):
+    """Paper Sec. V-C: partial sums move to bottom rows -> less min slack."""
+    ms = tm16.min_slack_ns
+    assert ms[12:].mean() < ms[:4].mean() - 0.5
+
+
+def test_min_slack_multimodal_bands(tm16):
+    """Four row bands should be separable (the Figs. 11-14 structure)."""
+    ms = tm16.min_slack_ns
+    band_means = [ms[i * 4:(i + 1) * 4].mean() for i in range(4)]
+    diffs = -np.diff(band_means)
+    assert (diffs > 0.15).all()
+
+
+def test_determinism():
+    a = TimingModel(n=16, seed=7).min_slack_flat()
+    b = TimingModel(n=16, seed=7).min_slack_flat()
+    np.testing.assert_array_equal(a, b)
+    c = TimingModel(n=16, seed=8).min_slack_flat()
+    assert not np.array_equal(a, c)
+
+
+@pytest.mark.parametrize("n", [16, 32, 64])
+def test_scales_to_paper_array_sizes(n):
+    tm = TimingModel(n=n, seed=1)
+    assert tm.min_slack_flat().shape == (n * n,)
+    assert (tm.min_slack_flat() > 0).all()      # meets timing at nominal V
+
+
+def test_delay_scale_monotone_in_voltage():
+    tech = TECH_NODES["vtr-22nm"]
+    vs = np.linspace(0.55, 1.2, 50)
+    d = delay_scale(tech, vs)
+    assert (np.diff(d) < 0).all()               # lower voltage -> slower
+    assert delay_scale(tech, tech.v_nom) == pytest.approx(1.0)
+
+
+def test_fails_at_low_voltage_not_at_nominal(tm16):
+    assert not tm16.fails_at(tm16.tech.v_nom).any()
+    assert tm16.fails_at(0.55).all()
+
+
+def test_min_safe_voltage_bisect(tm16):
+    v = tm16.min_safe_voltage()
+    assert not tm16.fails_at(v + 1e-3).any()
+    assert tm16.fails_at(v - 2e-3).all()
+
+
+def test_implementation_report_matches_synthesis(tm16):
+    """Figs. 4/5: per-MAC clustering keeps post-P&R delays within a few % of
+    synthesis; the abandoned per-path flow blows up ~2x (Sec. II-D)."""
+    synth = np.sort(tm16.path_delays_ns.reshape(-1))[::-1][:100]
+    impl = tm16.implementation_report(100, partitioned=True)
+    assert np.abs(impl / synth - 1.0).max() < 0.08
+    bad = tm16.implementation_report(100, partitioned=False)
+    assert (bad / synth).mean() > 1.5
+
+
+def test_render_report_table(tm16):
+    txt = render_report_table(tm16.report(5))
+    assert "Path 1" in txt and "sig_mac_out_reg" in txt
+    assert len(txt.splitlines()) == 6

@@ -1,0 +1,111 @@
+"""Algorithm 1 (static) and Algorithm 2 (runtime) voltage scaling."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (RuntimeScheme, assign_partition_voltages,
+                        runtime_voltage_scaling, static_voltage_scaling)
+
+
+def test_algorithm1_paper_example():
+    """n=4, [V_crash, V_min] = [0.95, 1.00] -> the paper's partition voltages
+    (printed rounded as 0.96/0.97/0.98/0.99)."""
+    v = static_voltage_scaling(v_min=1.00, v_crash=0.95, n=4)
+    np.testing.assert_allclose(v, [0.95625, 0.96875, 0.98125, 0.99375])
+    np.testing.assert_allclose(np.round(v, 2), [0.96, 0.97, 0.98, 0.99])
+
+
+def test_algorithm1_critical_region_vtr():
+    """The 4th Table II instant uses {0.7, 0.8, 0.9, 1.0}: with V_s = 0.1 the
+    band midpoints are 0.75..1.05; the paper's values are band edges rounded
+    to the 0.1 V supply step of [11]."""
+    v = static_voltage_scaling(v_min=1.1, v_crash=0.7, n=4)
+    np.testing.assert_allclose(v, [0.75, 0.85, 0.95, 1.05])
+
+
+@given(st.floats(0.3, 1.0), st.floats(0.05, 0.6), st.integers(1, 12))
+@settings(max_examples=60, deadline=None)
+def test_algorithm1_properties(v_crash, width, n):
+    v_min = v_crash + width
+    v = static_voltage_scaling(v_min, v_crash, n)
+    assert len(v) == n
+    assert (np.diff(v) > 0).all()                       # ascending
+    assert v[0] > v_crash and v[-1] < v_min             # strictly inside range
+    step = (v_min - v_crash) / n
+    np.testing.assert_allclose(np.diff(v), step, rtol=1e-9)  # uniform V_s
+
+
+def test_algorithm1_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        static_voltage_scaling(0.9, 0.95, 4)
+    with pytest.raises(ValueError):
+        static_voltage_scaling(1.0, 0.95, 0)
+
+
+def test_assign_partition_voltages_inverse_to_slack():
+    """Higher min-slack cluster -> lower V_ccint (paper Sec. I)."""
+    slack = [5.5, 7.2, 6.1, 6.9]
+    v = assign_partition_voltages(slack, np.array([0.96, 0.97, 0.98, 0.99]))
+    order = np.argsort(slack)          # lowest slack first
+    assert (np.diff(v[order]) < 0).all()
+    assert v[0] == 0.99 and v[1] == 0.96
+
+
+def test_runtime_step_verbatim():
+    """Algorithm 2: +V_s on failure else -V_s."""
+    v = np.array([0.96, 0.97, 0.98, 0.99])
+    nv = runtime_voltage_scaling(v, np.array([True, False, False, True]),
+                                 v_s=0.0125)
+    np.testing.assert_allclose(nv, [0.9725, 0.9575, 0.9675, 1.0025])
+
+
+def test_runtime_step_clamps():
+    s = RuntimeScheme(v_s=0.1, v_floor=0.5, v_ceil=1.0)
+    nv = s.step(np.array([0.55, 0.95]), np.array([False, True]))
+    np.testing.assert_allclose(nv, [0.5, 1.0])
+
+
+def test_calibration_converges_to_min_safe_voltage():
+    """With a threshold oracle, calibrate() must land each partition at the
+    lowest clean voltage reachable on the V_s grid."""
+    safe = np.array([0.62, 0.71, 0.86, 0.93])
+
+    def trial(v):
+        return v < safe                       # fails below the threshold
+
+    s = RuntimeScheme(v_s=0.05, v_floor=0.5, v_ceil=1.2)
+    out = s.calibrate(np.array([1.2, 1.2, 1.2, 1.2]), trial, max_trials=64)
+    assert (out >= safe).all()
+    assert (out - safe <= 0.05 + 1e-9).all()  # within one step of optimal
+
+
+def test_calibration_floor_clean_partitions_reach_floor():
+    def trial(v):
+        return np.zeros_like(v, dtype=bool)   # never fails
+
+    s = RuntimeScheme(v_s=0.05, v_floor=0.9, v_ceil=1.2)
+    out = s.calibrate(np.array([1.1, 1.0]), trial)
+    np.testing.assert_allclose(out, 0.9)
+
+
+def test_partition_flag_or_vs_and():
+    """The paper's text contradiction: OR protects any failing MAC, AND would
+    only react when *every* MAC fails."""
+    s_or = RuntimeScheme(v_s=0.1, v_floor=0, v_ceil=2, flag_reduce="or")
+    s_and = RuntimeScheme(v_s=0.1, v_floor=0, v_ceil=2, flag_reduce="and")
+    macs = np.array([True, False, False, False])
+    part = np.zeros(4, dtype=np.int64)
+    assert s_or.partition_flags(macs, part)[0]
+    assert not s_and.partition_flags(macs, part)[0]
+
+
+@given(st.lists(st.floats(0.5, 1.2), min_size=1, max_size=8),
+       st.lists(st.booleans(), min_size=1, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_runtime_step_direction_property(vs, flags):
+    n = min(len(vs), len(flags))
+    v = np.array(vs[:n])
+    f = np.array(flags[:n])
+    nv = runtime_voltage_scaling(v, f, v_s=0.01, v_floor=0.0, v_ceil=10.0)
+    assert ((nv > v) == f).all()

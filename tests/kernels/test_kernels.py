@@ -1,0 +1,233 @@
+"""Per-kernel shape/dtype sweeps, interpret=True vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.precision_island import precision_island
+from repro.kernels.razor_matmul import razor_matmul
+from repro.kernels.ssd_chunk import ssd_chunk
+from repro.kernels.systolic_mac import systolic_mac
+from repro.kernels.wkv6 import wkv6
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _ab(m, k, n, dtype, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (m, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(k2, (k, n), jnp.float32).astype(dtype)
+    return a, b
+
+
+# --------------------------------------------------------------- systolic ----
+
+@pytest.mark.parametrize("m,k,n,block", [(256, 256, 256, 128),
+                                         (128, 512, 384, 128),
+                                         (256, 128, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_systolic_mac_sweep(m, k, n, block, dtype):
+    a, b = _ab(m, k, n, dtype)
+    gm, gn = m // block, n // block
+    rng = np.random.default_rng(1)
+    v_map = jnp.asarray(rng.uniform(0.6, 1.0, (gm, gn)))
+    v_safe = jnp.full((gm, gn), 0.8)
+    c, flags = systolic_mac(a, b, v_map, v_safe, block_m=block, block_n=block,
+                            block_k=min(block, k), interpret=True)
+    c_ref, f_ref = ref.systolic_mac(a, b, v_map, v_safe, block=block)
+    np.testing.assert_array_equal(np.array(flags), np.array(f_ref))
+    # clean tiles: tight; corrupted tiles: one truncation quantum of headroom
+    scale = float(jnp.abs(c_ref).max())
+    fail = np.array(f_ref, bool)
+    cn, rn = np.array(c), np.array(c_ref)
+    for i in range(gm):
+        for j in range(gn):
+            tile = (slice(i * block, (i + 1) * block),
+                    slice(j * block, (j + 1) * block))
+            tol = scale * (2 ** -8 * 2.5 if fail[i, j] else 1e-5)
+            np.testing.assert_allclose(cn[tile], rn[tile], atol=tol)
+
+
+def test_systolic_mac_nominal_voltage_exact():
+    a, b = _ab(128, 128, 128, jnp.float32)
+    v = jnp.ones((1, 1))
+    c, flags = systolic_mac(a, b, v, v * 0.8, interpret=True)
+    np.testing.assert_allclose(np.array(c), np.array(a @ b), rtol=1e-6)
+    assert int(flags[0, 0]) == 0
+
+
+# ------------------------------------------------------------------ razor ----
+
+@pytest.mark.parametrize("m,k,n", [(256, 256, 256), (128, 384, 256)])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_razor_matmul_sweep(m, k, n, dtype):
+    a, b = _ab(m, k, n, dtype, seed=2)
+    c, flags, rel = razor_matmul(a, b, tol=0.05, interpret=True)
+    c_ref, f_ref, rel_ref = ref.razor_matmul(a, b, tol=0.05, block=128)
+    np.testing.assert_array_equal(np.array(flags), np.array(f_ref))
+    np.testing.assert_allclose(np.array(rel), np.array(rel_ref),
+                               rtol=1e-3, atol=1e-5)
+    # int8 round-to-nearest ties can flip by 1 ULP between the pallas
+    # interpreter and the oracle (x/scale exactly .5) — allow one
+    # quantization quantum of slack on the main-path tiles
+    np.testing.assert_allclose(np.array(c), np.array(c_ref),
+                               rtol=3e-3, atol=0.15)
+
+
+def test_razor_flags_fire_on_outliers():
+    """A single huge element wrecks its row's int8 scale (symmetric per-row
+    quantization zeroes everything else) -> the tile must flag and be
+    corrected to the shadow (f32) value.  Note a whole-column scale-up would
+    NOT fire: per-row scaling is scale-invariant."""
+    a, b = _ab(128, 256, 256, jnp.float32, seed=3)
+    b = b.at[0, 0].set(1000.0)            # outlier inside b.T row 0
+    # pick tol strictly between the poisoned tile's error and the clean one's
+    _, _, rel_ref = ref.razor_matmul(a, b, tol=1.0, block=128)
+    r0, r1 = float(rel_ref[0, 0]), float(rel_ref[0, 1])
+    assert r0 > r1 * 1.2, "poisoned tile must have visibly higher error"
+    tol = float(0.5 * (r0 + r1))
+    c, flags, rel = razor_matmul(a, b, tol=tol, interpret=True)
+    assert int(flags[0, 0]) == 1 and int(flags[0, 1]) == 0
+    shadow = np.array(a @ b)
+    np.testing.assert_allclose(np.array(c)[:, :128], shadow[:, :128],
+                               rtol=1e-5)
+
+
+# -------------------------------------------------------------- precision ----
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("tiers", [[[0, 1], [2, 0]], [[2, 2], [2, 2]],
+                                   [[0, 0], [0, 0]]])
+def test_precision_island_sweep(tiers, dtype):
+    a, b = _ab(256, 256, 256, dtype, seed=4)
+    t = np.asarray(tiers)
+    c = np.array(precision_island(a, b, jnp.asarray(t, jnp.int32),
+                                  interpret=True))
+    c_ref = np.array(ref.precision_island(a, b, jnp.asarray(t, jnp.int32),
+                                          block=128))
+    # Quantized tiers hit round-to-nearest ties (x/scale exactly .5) whose
+    # direction differs by 1 ULP between the interpreter and the oracle;
+    # bf16 inputs amplify this (duplicate values tie together).  Compare
+    # quantized tiles by relative Frobenius distance, exact tiles tightly.
+    for i in range(2):
+        for j in range(2):
+            blk = (slice(i * 128, (i + 1) * 128), slice(j * 128, (j + 1) * 128))
+            if t[i, j] == 2:
+                np.testing.assert_allclose(c[blk], c_ref[blk], rtol=1e-4,
+                                           atol=1e-4)
+            else:
+                num = np.linalg.norm(c[blk] - c_ref[blk])
+                den = np.linalg.norm(c_ref[blk]) + 1e-9
+                # int4-on-bf16 is the worst tie case (coarse grid x coarse
+                # mantissa): allow 4% Frobenius; int8/f32 stay well under
+                bound = 4e-2 if (t[i, j] == 0 and dtype == jnp.bfloat16) \
+                    else 2e-2
+                assert num / den < bound, (i, j, num / den)
+
+
+def test_precision_tiers_order_error():
+    """int4 tile error > int8 tile error > f32 tile error vs exact."""
+    a, b = _ab(128, 256, 128, jnp.float32, seed=5)
+    exact = np.array(a @ b)
+    errs = []
+    for tier in (0, 1, 2):
+        c = precision_island(a, b, jnp.full((1, 1), tier, jnp.int32),
+                             interpret=True)
+        errs.append(np.abs(np.array(c) - exact).max())
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-4
+
+
+# ------------------------------------------------------------------- wkv6 ----
+
+@pytest.mark.parametrize("b,s,h,p,chunk", [(2, 64, 2, 16, 16),
+                                           (1, 128, 3, 32, 32),
+                                           (2, 32, 1, 8, 32)])
+def test_wkv6_kernel_vs_naive_ref(b, s, h, p, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(b * s), 5)
+    r = jax.random.normal(ks[0], (b, s, h, p))
+    k = jax.random.normal(ks[1], (b, s, h, p))
+    v = jax.random.normal(ks[2], (b, s, h, p))
+    w_log = -jnp.exp(jax.random.normal(ks[3], (b, s, h, p)) * 0.5)
+    u = jax.random.normal(ks[4], (h, p)) * 0.1
+    s0 = jax.random.normal(ks[0], (b, h, p, p)) * 0.1
+    y, s_out = wkv6(r, k, v, w_log, u, s0, chunk=chunk, interpret=True)
+    y_ref, s_ref = ref.wkv6(r, k, v, w_log, u, s0)
+    np.testing.assert_allclose(np.array(y), np.array(y_ref), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.array(s_out), np.array(s_ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_wkv6_matches_model_chunked_form():
+    """Kernel == the model's wkv6_chunked (the jnp chunked oracle)."""
+    from repro.models.ssm import wkv6_chunked
+    b, s, h, p = 1, 64, 2, 16
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (b, s, h, p)) for i in range(3))
+    w_log = -jnp.exp(jax.random.normal(ks[3], (b, s, h, p)) * 0.3)
+    u = jax.random.normal(ks[4], (h, p)) * 0.1
+    s0 = jnp.zeros((b, h, p, p))
+    y_k, s_k = wkv6(r, k, v, w_log, u, s0, chunk=16, interpret=True)
+    y_m, s_m = wkv6_chunked(r, k, v, w_log, u, s0, 16)
+    np.testing.assert_allclose(np.array(y_k), np.array(y_m), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.array(s_k), np.array(s_m), rtol=1e-4,
+                               atol=1e-5)
+
+
+# -------------------------------------------------------------------- ssd ----
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [(2, 64, 2, 16, 8, 16),
+                                             (1, 96, 4, 32, 16, 32),
+                                             (2, 32, 1, 8, 4, 8)])
+def test_ssd_kernel_vs_naive_ref(b, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A_log = jax.random.normal(ks[2], (h,)) * 0.3
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jax.random.normal(ks[5], (h,))
+    s0 = jnp.zeros((b, h, n, p))
+    y, s_out = ssd_chunk(x, dt, A_log, B, C, D, s0, chunk=chunk,
+                         interpret=True)
+    y_ref, s_ref = ref.ssd(x, dt, A_log, B, C, D, s0)
+    np.testing.assert_allclose(np.array(y), np.array(y_ref), rtol=3e-4,
+                               atol=3e-4)
+    np.testing.assert_allclose(np.array(s_out), np.array(s_ref), rtol=3e-4,
+                               atol=3e-4)
+
+
+def test_ssd_nonzero_initial_state():
+    b, s, h, p, n = 1, 32, 2, 8, 4
+    ks = jax.random.split(KEY, 7)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A_log = jax.random.normal(ks[2], (h,)) * 0.3
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jax.random.normal(ks[5], (h,))
+    s0 = jax.random.normal(ks[6], (b, h, n, p))
+    y, s_out = ssd_chunk(x, dt, A_log, B, C, D, s0, chunk=8, interpret=True)
+    y_ref, s_ref = ref.ssd(x, dt, A_log, B, C, D, s0)
+    np.testing.assert_allclose(np.array(y), np.array(y_ref), rtol=3e-4,
+                               atol=3e-4)
+    np.testing.assert_allclose(np.array(s_out), np.array(s_ref), rtol=3e-4,
+                               atol=3e-4)
+
+
+# ------------------------------------------------------------ composed op ----
+
+def test_voltage_scaled_matmul_flow():
+    from repro.kernels.ops import voltage_scaled_matmul
+    a, b = _ab(256, 256, 512, jnp.bfloat16, seed=7)
+    c, info = voltage_scaled_matmul(a, b, block=128, n_partitions=4,
+                                    v_min=1.0, v_crash=0.7, interpret=True)
+    assert c.shape == (256, 512)
+    assert info["energy_ratio_vs_nominal"] < 1.0      # saves energy
+    # runtime step raised every flagged partition's rail
+    raised = info["v_runtime"] >= info["v_static"]
+    assert raised[np.array(info["flags_static"], bool)].all()

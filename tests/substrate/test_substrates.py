@@ -1,0 +1,316 @@
+"""Data pipeline, optimizer, checkpointing, fault tolerance, trainer, serving."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data import DataConfig, PrefetchLoader, SyntheticDataset
+from repro.models import model_api
+from repro.runtime import HeartbeatMonitor, plan_elastic_remap
+from repro.serve import Request, ServeEngine
+from repro.train import TrainConfig, train
+
+
+# ------------------------------------------------------------------- data ----
+
+def test_data_deterministic_replay():
+    cfg = DataConfig(vocab_size=512, seq_len=64, global_batch=8)
+    a = SyntheticDataset(cfg).batch_at(7)
+    b = SyntheticDataset(cfg).batch_at(7)
+    np.testing.assert_array_equal(a.data["tokens"], b.data["tokens"])
+    c = SyntheticDataset(cfg).batch_at(8)
+    assert not np.array_equal(a.data["tokens"], c.data["tokens"])
+
+
+def test_data_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=8)
+    whole = SyntheticDataset(cfg).batch_at(3).data["tokens"]
+    parts = [SyntheticDataset(cfg, shard=s, num_shards=4).batch_at(3)
+             .data["tokens"] for s in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), whole)
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=2)
+    b = SyntheticDataset(cfg).batch_at(0)
+    np.testing.assert_array_equal(b.data["labels"][:, :-1],
+                                  b.data["tokens"][:, 1:])
+
+
+def test_data_packing_has_eos():
+    cfg = DataConfig(vocab_size=512, seq_len=2048, global_batch=2,
+                     mean_doc_len=128)
+    b = SyntheticDataset(cfg).batch_at(0)
+    assert (b.data["tokens"] == 1).sum() > 0
+
+
+def test_prefetch_loader_ordering():
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=2)
+    loader = PrefetchLoader(SyntheticDataset(cfg), start_step=5)
+    batches = [next(loader) for _ in range(3)]
+    loader.close()
+    assert [b.step for b in batches] == [5, 6, 7]
+
+
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_data_tokens_in_vocab(step, shards):
+    cfg = DataConfig(vocab_size=97, seq_len=32, global_batch=8)
+    b = SyntheticDataset(cfg, shard=0, num_shards=shards).batch_at(step)
+    assert b.data["tokens"].min() >= 1
+    assert b.data["tokens"].max() < 97
+
+
+def test_data_rejects_nondivisible_shards():
+    cfg = DataConfig(vocab_size=97, seq_len=32, global_batch=8)
+    with pytest.raises(ValueError):
+        SyntheticDataset(cfg, shard=0, num_shards=3)
+
+
+# -------------------------------------------------------------- optimizer ----
+
+def _tiny_params():
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (8, 16), jnp.float32).astype(jnp.bfloat16),
+            "b": jnp.zeros((16,), jnp.float32)}
+
+
+def test_adamw_descends_quadratic():
+    cfg = optim.AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
+                            schedule="constant")
+    params = _tiny_params()
+    state = optim.init_state(params, cfg)
+    target = jax.tree.map(lambda p: jnp.ones_like(p), params)
+
+    def loss_fn(p):
+        return sum(jnp.sum((a.astype(jnp.float32) - t) ** 2)
+                   for a, t in zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+    l0 = float(loss_fn(params))
+    for _ in range(60):
+        grads = jax.grad(loss_fn)(params)
+        params, state = optim.apply_updates(params, state, grads, cfg)
+    assert float(loss_fn(params)) < 0.1 * l0
+    assert int(state["step"]) == 60
+
+
+def test_adamw_grad_clip():
+    cfg = optim.AdamWConfig(lr=1e-3, grad_clip=1.0)
+    params = _tiny_params()
+    state = optim.init_state(params, cfg)
+    huge = jax.tree.map(lambda p: 1e6 * jnp.ones_like(p, jnp.float32), params)
+    new_params, _ = optim.apply_updates(params, state, huge, cfg)
+    delta = max(float(jnp.abs(n.astype(jnp.float32) - p.astype(jnp.float32)).max())
+                for n, p in zip(jax.tree.leaves(new_params),
+                                jax.tree.leaves(params)))
+    assert delta < 0.1            # clip bounded the update
+
+
+def test_adamw_int8_moments_roughly_match_fp32():
+    params = _tiny_params()
+    g = jax.tree.map(lambda p: 0.01 * jnp.ones_like(p, jnp.float32), params)
+    cfg32 = optim.AdamWConfig(lr=0.01, int8_moments=False, weight_decay=0.0)
+    cfg8 = optim.AdamWConfig(lr=0.01, int8_moments=True, weight_decay=0.0)
+    p32, s32 = params, optim.init_state(params, cfg32)
+    p8, s8 = params, optim.init_state(params, cfg8)
+    for _ in range(10):
+        p32, s32 = optim.apply_updates(p32, s32, g, cfg32)
+        p8, s8 = optim.apply_updates(p8, s8, g, cfg8)
+    for a, b in zip(jax.tree.leaves(p32), jax.tree.leaves(p8)):
+        np.testing.assert_allclose(np.array(a, np.float32),
+                                   np.array(b, np.float32), atol=5e-3)
+    # compression is real: moments stored as int8
+    assert s8["per_param"]["w"]["mu"].dtype == jnp.int8
+
+
+def test_lr_schedule():
+    cfg = optim.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(optim.lr_at(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6
+    assert lrs[99] < lrs[50] < lrs[12]
+
+
+# ------------------------------------------------------------- checkpoint ----
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(12, dtype=np.float32).reshape(4, 3),
+            "nest": {"b": np.ones((2, 2), np.int32)},
+            "scalar": np.float32(3.5)}
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(10, tree)
+    out = mgr.restore(tree)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["nest"]["b"], tree["nest"]["b"])
+    assert out["scalar"] == tree["scalar"]
+    assert mgr.latest_step() == 10
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Write with 4 hosts, restore on 1 (and vice versa)."""
+    tree = {"w": np.arange(64, dtype=np.float32).reshape(8, 8)}
+    writers = [CheckpointManager(tmp_path, host_id=h, num_hosts=4)
+               for h in range(4)]
+    for w in writers:
+        w.save(5, tree)
+    reader = CheckpointManager(tmp_path, host_id=0, num_hosts=1)
+    out = reader.restore(tree)
+    np.testing.assert_array_equal(out["w"], tree["w"])
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    tree = {"x": np.ones((4,), np.float32)}
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, blocking=False)
+        mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"x": np.zeros(3, np.float32)})
+    mgr.save(2, {"x": np.ones(3, np.float32)})
+    out = mgr.restore({"x": np.zeros(3, np.float32)}, step=1)
+    np.testing.assert_array_equal(out["x"], np.zeros(3))
+
+
+# ---------------------------------------------------------- fault tolerance ----
+
+def test_heartbeat_detects_dead_host():
+    mon = HeartbeatMonitor(num_hosts=4, timeout_steps=2)
+    for step in range(5):
+        for h in range(4):
+            if h == 2 and step >= 1:
+                continue                      # host 2 dies after step 0
+            mon.beat(h, step, 0.1)
+        dead = mon.check_dead(step)
+        if step >= 3:
+            assert dead == [2] or 2 not in mon.alive_hosts()
+    assert mon.alive_hosts() == [0, 1, 3]
+
+
+def test_straggler_detection():
+    """Patience counts consecutive *monitoring checks*: the monitor is polled
+    once per step, and flags the slow host only after `patience` flags."""
+    mon = HeartbeatMonitor(num_hosts=8, straggler_z=3.0, straggler_patience=2)
+    reports = []
+    for step in range(6):
+        for h in range(8):
+            mon.beat(h, step, 1.0 if h != 5 else 4.0)
+        reports = mon.stragglers()
+        if step == 0:
+            assert reports == []                 # patience not yet reached
+    assert [r.host_id for r in reports] == [5]
+    assert reports[0].z_score > 3.0
+
+
+def test_no_straggler_on_uniform_times():
+    mon = HeartbeatMonitor(num_hosts=8)
+    for step in range(6):
+        for h in range(8):
+            mon.beat(h, step, 1.0 + 0.01 * h)
+    assert mon.stragglers() == []
+
+
+def test_elastic_remap_drops_incomplete_groups():
+    # 8 hosts, 2 hosts per model-parallel group -> 4 dp groups; hosts 2,5 die
+    alive = [0, 1, 3, 4, 6, 7]
+    plan = plan_elastic_remap(alive, model_parallel=2, hosts_per_dp_group=2)
+    assert plan.data_parallel == 2                 # groups {0,1} and {6,7}
+    assert plan.host_to_shard == {0: 0, 1: 0, 6: 1, 7: 1}
+    assert set(plan.dropped_hosts) == {3, 4}
+
+
+def test_elastic_remap_all_dead_raises():
+    with pytest.raises(RuntimeError):
+        plan_elastic_remap([0], model_parallel=2, hosts_per_dp_group=2)
+
+
+# ---------------------------------------------------------------- trainer ----
+
+def test_train_loss_decreases_and_resumes(tmp_path):
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    shape = ShapeConfig("t", 32, 4, "train")
+    tc = TrainConfig(steps=16, log_every=0, checkpoint_every=8,
+                     checkpoint_dir=str(tmp_path), async_checkpoint=False)
+    res = train(cfg, shape, tc, optim.AdamWConfig(lr=5e-3, warmup_steps=2,
+                                                  total_steps=16))
+    assert res.steps_done == 16
+    assert np.isfinite(res.losses).all()
+    assert np.mean(res.losses[-4:]) < np.mean(res.losses[:4]) - 0.05
+
+    # crash/restart: resume from step 16 checkpoint, run to 20
+    tc2 = dataclasses.replace(tc, steps=20)
+    res2 = train(cfg, shape, tc2, optim.AdamWConfig(lr=5e-3, warmup_steps=2,
+                                                    total_steps=16),
+                 resume=True)
+    assert res2.steps_done == 4                     # resumed, not restarted
+
+
+def test_train_resume_bit_identical(tmp_path):
+    """Uninterrupted 6-step run == (4 steps, crash, resume 2 steps)."""
+    cfg = get_config("starcoder2-3b", smoke=True)
+    shape = ShapeConfig("t", 32, 4, "train")
+    ocfg = optim.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=6)
+
+    straight = train(cfg, shape,
+                     TrainConfig(steps=6, log_every=0, checkpoint_every=0),
+                     ocfg)
+    part1 = train(cfg, shape,
+                  TrainConfig(steps=4, log_every=0, checkpoint_every=4,
+                              checkpoint_dir=str(tmp_path),
+                              async_checkpoint=False), ocfg)
+    part2 = train(cfg, shape,
+                  TrainConfig(steps=6, log_every=0, checkpoint_every=0,
+                              checkpoint_dir=str(tmp_path)), ocfg,
+                  resume=True)
+    np.testing.assert_allclose(straight.losses[4:], part2.losses, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- serving ----
+
+def test_serve_engine_drains_queue():
+    cfg = get_config("phi4-mini-3.8b", smoke=True)
+    api = model_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=2, max_len=48)
+    for uid in range(5):
+        eng.submit(Request(uid=uid, prompt=[3, 4, 5 + uid],
+                           max_new_tokens=4))
+    stats = eng.run_until_drained()
+    assert stats.completed == 5
+    assert stats.waves == 3                          # 2 + 2 + 1
+    assert stats.tokens_generated == 20
+    assert all(len(t) == 0 for t in [eng.queue])
+
+
+def test_serve_engine_ssm_family():
+    cfg = get_config("rwkv6-1.6b", smoke=True)
+    api = model_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=2, max_len=32)
+    eng.submit(Request(uid=0, prompt=[3, 4], max_new_tokens=3))
+    stats = eng.run_until_drained()
+    assert stats.completed == 1 and stats.tokens_generated == 3
+
+
+def test_serve_greedy_is_deterministic():
+    cfg = get_config("starcoder2-3b", smoke=True)
+    api = model_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(1))
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(cfg, params, slots=1, max_len=32)
+        req = Request(uid=0, prompt=[5, 6, 7], max_new_tokens=5)
+        eng.submit(req)
+        eng.run_until_drained()
+        outs.append(tuple(req.out_tokens))
+    assert outs[0] == outs[1]
