@@ -108,16 +108,39 @@ def bench_clustering(fast: bool) -> List[Tuple[str, float, str]]:
 
 
 def bench_cadflow(fast: bool) -> List[Tuple[str, float, str]]:
-    """End-to-end flow (Fig. 9) incl. Razor-runtime calibration."""
-    from repro.core import run_flow
+    """End-to-end flow (Fig. 9) incl. Razor-runtime calibration, via the
+    staged repro.flow pipeline."""
+    from repro.flow import FlowConfig, run
     out = []
     for tech in ("vivado-28nm", "vtr-22nm"):
-        us, rep = _time_us(lambda t=tech: run_flow(16, t, "dbscan",
-                                                   seed=2021), repeats=1)
+        us, rep = _time_us(
+            lambda t=tech: run(FlowConfig(array_n=16, tech=t, algo="dbscan",
+                                          seed=2021)), repeats=1)
         out.append((f"cadflow/16x16_{tech}", us,
                     f"static={rep.static_reduction_pct:.2f}%"
                     f"_runtime={rep.runtime_reduction_pct:.2f}%"))
     return out
+
+
+def bench_flow_sweep(fast: bool) -> List[Tuple[str, float, str]]:
+    """Multi-scenario sweep with shared artifact-prefix caching: the timing
+    stage must run once per tech node regardless of how many clustering
+    algorithms ride on it."""
+    from repro.flow import FlowConfig, sweep
+    techs = ["vivado-28nm", "vtr-22nm"] if fast else \
+        ["vivado-28nm", "vtr-22nm", "vtr-45nm", "vtr-130nm"]
+    algos = ["kmeans", "dbscan"] if fast else \
+        ["kmeans", "hierarchical", "meanshift", "dbscan"]
+
+    def go():
+        return sweep({"tech": techs, "algo": algos},
+                     FlowConfig(array_n=16, seed=2021))
+
+    us, res = _time_us(go, repeats=1)
+    return [("flow_sweep/%dtech_x_%dalgo" % (len(techs), len(algos)), us,
+             f"configs={len(res.configs)}"
+             f"_timing_runs={res.timing_stage_runs()}"
+             f"_best={res.best()['runtime_reduction_pct']:.2f}%")]
 
 
 def bench_systolic_sim(fast: bool) -> List[Tuple[str, float, str]]:
@@ -264,6 +287,7 @@ BENCHES: Dict[str, Callable] = {
     "fig15_16": bench_fig15_16,
     "clustering": bench_clustering,
     "cadflow": bench_cadflow,
+    "flow_sweep": bench_flow_sweep,
     "systolic_sim": bench_systolic_sim,
     "kernels": bench_kernels,
     "power_report": bench_power_report,

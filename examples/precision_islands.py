@@ -1,9 +1,14 @@
 """Beyond-paper example: the voltage-island control loop running on MXU
-precision tiers (DESIGN.md Sec. 2b) — static assignment from weight-tile
-headroom, Razor-style shadow flags, Algorithm-2 calibration, energy report.
+precision tiers (DESIGN.md Sec. 2b), expressed as a *custom* repro.flow
+pipeline — the same Stage/Artifacts machinery that runs the paper's CAD
+flow, with every step swapped for its precision analogue: headroom
+extraction ~ timing, static tier assignment ~ Algorithm 1, Razor shadow
+flags + calibration ~ Algorithm 2, and an energy report.
 
     PYTHONPATH=src python examples/precision_islands.py
 """
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -12,51 +17,92 @@ import numpy as np
 from repro.core.precision import (PrecisionController, energy_ratio,
                                   static_tier_assignment, tier_names,
                                   tile_headroom)
+from repro.flow import Artifacts, FunctionStage, Pipeline
 from repro.kernels.ops import precision_mm, razor_mm
+
+
+@dataclasses.dataclass(frozen=True)
+class IslandConfig:
+    """Config for the precision-island pipeline (any object works — stages
+    only read the fields they declare)."""
+    block: int = 128
+    tol: float = 0.02
+
 
 rng = jax.random.PRNGKey(0)
 k1, k2 = jax.random.split(rng)
 M = K = N = 256
-BLK = 128
 a = jax.random.normal(k1, (M, K), jnp.bfloat16)
 w = jax.random.normal(k2, (K, N), jnp.float32)
 # give one weight tile heavy outliers (low quantization headroom)
 w = w.at[0, 128:].mul(40.0)
 w = w.astype(jnp.bfloat16)
 
+
 # 1. "timing extraction": per-tile quantization headroom == min slack
-head = tile_headroom(np.asarray(w, np.float32), tile=BLK)
-print("tile headroom (higher = more slack):\n", head.round(2))
+def extract_headroom(art: Artifacts, cfg: IslandConfig) -> Artifacts:
+    head = tile_headroom(np.asarray(art.weights, np.float32), tile=cfg.block)
+    return art.with_(headroom=head)
+
 
 # 2. Algorithm-1 analogue: band headroom -> static tiers
-gm, gn = M // BLK, N // BLK
-tiers = np.zeros((gm, gn), np.int64)
-tiers[:] = static_tier_assignment(np.broadcast_to(head.mean(0), (gm, gn)))
-print("static tiers:\n", tier_names(tiers))
-
-# 3. Razor shadow flags on the int8 main path
-_, flags, rel = razor_mm(a, w, tol=0.02)
-print("razor mismatch flags:\n", np.asarray(flags))
-
-# 4. Algorithm-2 calibration driven by shadow flags
-ctrl = PrecisionController()
+def assign_static_tiers(art: Artifacts, cfg: IslandConfig) -> Artifacts:
+    gm, gn = M // cfg.block, N // cfg.block
+    tiers = np.zeros((gm, gn), np.int64)
+    tiers[:] = static_tier_assignment(
+        np.broadcast_to(art.headroom.mean(0), (gm, gn)))
+    return art.with_(static_tiers=tiers)
 
 
-def trial(t):
-    _, f, _ = razor_mm(a, w, tol=0.02)
-    # a tile flags iff it's running below the tier its headroom needs
-    need = np.where(np.asarray(f) > 0, 2, 0)
-    return t < need
+# 3+4. Algorithm-2 analogue: Razor shadow flags drive tier calibration
+def calibrate_tiers(art: Artifacts, cfg: IslandConfig) -> Artifacts:
+    _, flags, _ = razor_mm(art.activations, art.weights, tol=cfg.tol)
+    ctrl = PrecisionController()
+
+    def trial(t):
+        _, f, _ = razor_mm(art.activations, art.weights, tol=cfg.tol)
+        # a tile flags iff it's running below the tier its headroom needs
+        need = np.where(np.asarray(f) > 0, 2, 0)
+        return t < need
+
+    calibrated = ctrl.calibrate(art.static_tiers, trial)
+    return art.with_(razor_flags=np.asarray(flags), tiers=calibrated)
 
 
-calibrated = ctrl.calibrate(tiers, trial)
-print("calibrated tiers:\n", tier_names(calibrated))
+# 5. execute on the precision-island kernel + energy report
+def execute_and_report(art: Artifacts, cfg: IslandConfig) -> Artifacts:
+    c = precision_mm(art.activations, art.weights,
+                     jnp.asarray(art.tiers, jnp.int32))
+    exact = (np.asarray(art.activations, np.float32)
+             @ np.asarray(art.weights, np.float32))
+    err = np.linalg.norm(np.asarray(c) - exact) / np.linalg.norm(exact)
+    return art.with_(product=c, rel_error=err,
+                     energy_vs_bf16=energy_ratio(art.tiers),
+                     static_energy_vs_bf16=energy_ratio(art.static_tiers))
 
-# 5. execute on the precision-island kernel + energy
-c = precision_mm(a, w, jnp.asarray(calibrated, jnp.int32))
-exact = np.asarray(a, np.float32) @ np.asarray(w, np.float32)
-err = np.linalg.norm(np.asarray(c) - exact) / np.linalg.norm(exact)
-print(f"\nresult rel-error vs f32: {err:.4f}")
-print(f"energy vs all-bf16: {energy_ratio(calibrated):.2f}x "
-      f"(static would be {energy_ratio(tiers):.2f}x, "
+
+pipe = Pipeline([
+    FunctionStage("headroom", extract_headroom,
+                  requires=("weights",), provides=("headroom",)),
+    FunctionStage("static_tiers", assign_static_tiers,
+                  requires=("headroom",), provides=("static_tiers",)),
+    FunctionStage("calibrate", calibrate_tiers,
+                  requires=("activations", "weights", "static_tiers"),
+                  provides=("razor_flags", "tiers")),
+    FunctionStage("execute", execute_and_report,
+                  requires=("activations", "weights", "tiers"),
+                  provides=("product", "rel_error", "energy_vs_bf16")),
+])
+print("custom pipeline:", [s.name for s in pipe.stages])
+
+art = pipe.run(IslandConfig(block=128, tol=0.02),
+               initial=Artifacts({"activations": a, "weights": w}))
+
+print("tile headroom (higher = more slack):\n", art.headroom.round(2))
+print("static tiers:\n", tier_names(art.static_tiers))
+print("razor mismatch flags:\n", art.razor_flags)
+print("calibrated tiers:\n", tier_names(art.tiers))
+print(f"\nresult rel-error vs f32: {art.rel_error:.4f}")
+print(f"energy vs all-bf16: {art.energy_vs_bf16:.2f}x "
+      f"(static would be {art.static_energy_vs_bf16:.2f}x, "
       f"all-bf16 = 1.00x)")

@@ -1,16 +1,25 @@
-"""Quickstart: the paper's full CAD flow in five lines, then a look inside.
+"""Quickstart: the paper's full CAD flow on the staged repro.flow pipeline —
+config -> pipeline -> report, then a multi-scenario sweep.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import run_flow, render_report_table, TimingModel
+from repro.core import TimingModel, render_report_table
+from repro.flow import ArtifactStore, FlowConfig, Pipeline, report_from, sweep
 
-# --- the paper's pipeline (Fig. 9): synthesis timing -> DBSCAN clustering of
-#     per-MAC min-slack -> floorplan -> Algorithm 1 (static V_ccint) ->
-#     Algorithm 2 (Razor runtime calibration) -> power report
-report = run_flow(array_n=16, tech="vivado-28nm", algo="dbscan", seed=2021)
+# --- the paper's pipeline (Fig. 9) as a declarative config + stage chain:
+#     synthesis timing -> DBSCAN clustering of per-MAC min-slack -> floorplan
+#     -> Algorithm 1 (static V_ccint) -> Algorithm 2 (Razor runtime
+#     calibration) -> power report + constraint files
+cfg = FlowConfig(array_n=16, tech="vivado-28nm", algo="dbscan", seed=2021)
+pipe = Pipeline()                      # the default Fig. 9 stage chain
+print("stages:", [s.name for s in pipe.stages])
+
+store = ArtifactStore()                # caches stage outputs across runs
+artifacts = pipe.run(cfg, store=store)
+report = report_from(artifacts, cfg)
 print(report.summary())
 print()
 
@@ -24,7 +33,8 @@ print()
 print("static  V_ccint per partition:", np.round(report.static_v, 4))
 print("runtime V_ccint per partition:", np.round(report.runtime_v, 4))
 print(f"razor trial runs used: {report.razor_trials}; "
-      f"fail-free after calibration: {report.calibrated_fail_free}")
+      f"fail-free after calibration: {report.calibrated_fail_free}; "
+      f"converged: {report.calibration_converged.tolist()}")
 print()
 
 # --- the constraint artifact the flow hands to the vendor tool
@@ -37,3 +47,13 @@ print(f"power: baseline {report.baseline_mw:.0f} mW -> static "
       f"{report.static_mw:.0f} mW ({report.static_reduction_pct:.2f}% saved, "
       f"paper reports 6.37%) -> runtime {report.runtime_mw:.0f} mW "
       f"({report.runtime_reduction_pct:.2f}%)")
+print()
+
+# --- sweep two tech nodes x two algorithms; the shared store means the
+#     timing stage runs once per tech, not once per config
+result = sweep({"tech": ["vivado-28nm", "vtr-22nm"],
+                "algo": ["kmeans", "dbscan"]}, cfg, store=store)
+print(result.table(columns=("tech", "algo", "n_partitions",
+                            "static_reduction_pct", "runtime_reduction_pct")))
+print(f"(timing stage executed {result.timing_stage_runs()}x "
+      f"for {len(result.configs)} configs)")

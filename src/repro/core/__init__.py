@@ -18,7 +18,8 @@ from .razor import (DETECTED, OK, SILENT, RazorConfig, RazorMac, classify_arriva
 from .systolic import SimStats, SystolicSim, fast_fault_matmul
 from .timing import TECH_NODES, TechNode, TimingModel, TimingPath, delay_scale, \
     render_report_table
-from .voltage import (RuntimeScheme, assign_partition_voltages,
-                      runtime_voltage_scaling, static_voltage_scaling)
+from .voltage import (CalibrationResult, RuntimeScheme,
+                      assign_partition_voltages, runtime_voltage_scaling,
+                      static_voltage_scaling)
 
 __all__ = [name for name in dir() if not name.startswith("_")]

@@ -1,80 +1,42 @@
-"""End-to-end CAD flow (paper Fig. 9): synthesis timing -> clustering ->
-floorplan -> static voltages (Algorithm 1) -> runtime calibration
-(Algorithm 2 + Razor trials) -> power report.
+"""DEPRECATED shim over :mod:`repro.flow` — the staged CAD-flow pipeline.
 
-This is the paper's primary contribution as one composable entry point:
+The paper's flow (Fig. 9: timing -> clustering -> floorplan -> static
+Algorithm-1 voltages -> Razor runtime calibration -> power report) used to
+live here as the monolithic ``run_flow()``.  It is now the composable
+``repro.flow`` pipeline::
 
-    report = run_flow(array_n=16, tech="vivado-28nm", algo="dbscan")
+    from repro.flow import FlowConfig, run, sweep
 
-The returned FlowReport carries every intermediate artifact (timing report,
-cluster labels, constraint files, voltages, power numbers) so benchmarks and
-tests can interrogate any stage.
+    report = run(FlowConfig(array_n=16, tech="vivado-28nm", algo="dbscan"))
+    result = sweep({"tech": ["vivado-28nm", "vtr-22nm"],
+                    "algo": ["kmeans", "dbscan"]})
+
+``run_flow()`` and ``FlowReport`` remain as thin, bit-for-bit-compatible
+wrappers so existing callers keep working; new code should import from
+``repro.flow`` (declarative ``FlowConfig``, pluggable stages, artifact
+caching, multi-scenario sweeps).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import numpy as np
 
-from . import clustering as cl
-from .constraints import generate_sdc, generate_xdc
-from .partition import Floorplan, grid_floorplan, partition_min_slack
-from .power import PowerModel, model_for
-from .razor import RazorConfig
-from .systolic import SystolicSim
-from .timing import TECH_NODES, TimingModel
-from .voltage import RuntimeScheme, assign_partition_voltages, static_voltage_scaling
+# NOTE: only ..flow.report is imported at module scope — importing the full
+# ..flow package here would be circular (repro.flow's stages import the core
+# submodules, which triggers this module via repro.core.__init__).
+from ..flow.report import FlowReport
+from .power import model_for
 
-
-@dataclasses.dataclass
-class FlowReport:
-    array_n: int
-    tech: str
-    algo: str
-    n_partitions: int
-    labels: np.ndarray                   # (n*n,) cluster id per MAC
-    min_slack: np.ndarray                # (n*n,)
-    floorplan: Floorplan
-    static_v: np.ndarray                 # (P,) Algorithm-1 voltages per partition
-    runtime_v: np.ndarray                # (P,) after Algorithm-2 calibration
-    baseline_mw: float
-    static_mw: float
-    runtime_mw: float
-    static_reduction_pct: float
-    runtime_reduction_pct: float
-    xdc: str
-    sdc: str
-    razor_trials: int
-    calibrated_fail_free: bool
-
-    def summary(self) -> str:
-        return (f"{self.array_n}x{self.array_n} {self.tech} {self.algo} "
-                f"P={self.n_partitions} static {self.static_reduction_pct:.2f}% "
-                f"runtime {self.runtime_reduction_pct:.2f}% "
-                f"(baseline {self.baseline_mw:.0f} mW)")
+__all__ = ["FlowReport", "run_flow", "paper_table2_flow"]
 
 
 def _cluster(slack: np.ndarray, algo: str, n_clusters: Optional[int],
              seed: int) -> np.ndarray:
-    """Run the chosen algorithm with paper-consistent defaults and fold noise."""
-    algo = algo.lower()
-    spread = float(slack.max() - slack.min()) or 1.0
-    if algo in ("kmeans", "k-means"):
-        labels = cl.kmeans(slack, k=n_clusters or 4, seed=seed)
-    elif algo in ("hierarchical", "hierarchy"):
-        labels = cl.hierarchical(slack, n_clusters=n_clusters or 4)
-    elif algo in ("meanshift", "mean-shift"):
-        # the paper's radius 0.4 on its ~2.4 ns 16x16 slack spread, rescaled
-        labels = cl.meanshift(slack, bandwidth=0.17 * spread)
-    elif algo == "dbscan":
-        labels = cl.dbscan(slack, eps=spread / 12.0,
-                           min_pts=max(4, len(slack) // 64))
-        labels = cl.attach_noise_to_nearest(slack, labels)
-    else:
-        raise ValueError(f"unknown algorithm {algo!r}")
-    return cl.relabel_by_feature_mean(slack, labels)   # 0 = highest slack
+    """Deprecated alias of :func:`repro.flow.cluster_slack`."""
+    from ..flow.stages import cluster_slack
+    return cluster_slack(slack, algo, n_clusters, seed)
 
 
 def run_flow(array_n: int = 16, tech: str = "vivado-28nm", algo: str = "dbscan",
@@ -82,63 +44,17 @@ def run_flow(array_n: int = 16, tech: str = "vivado-28nm", algo: str = "dbscan",
              seed: int = 2021, v_min: Optional[float] = None,
              v_crash: Optional[float] = None, freq_mhz: float = 100.0,
              calibrate: bool = True, max_trials: int = 48) -> FlowReport:
-    """Execute the full flow of Fig. 9 and return every artifact."""
-    node = TECH_NODES[tech]
-    v_min = node.v_min if v_min is None else v_min
-    v_crash = node.v_crash if v_crash is None else v_crash
+    """Execute the full flow of Fig. 9 and return every artifact.
 
-    # 1. synthesis timing (Sec. II-A/II-B)
-    tm = TimingModel(n=array_n, clock_ns=clock_ns, tech=node, seed=seed)
-    slack = tm.min_slack_flat()
-
-    # 2. clustering (Sec. IV) + cluster 0 = highest slack
-    labels = _cluster(slack, algo, n_clusters, seed)
-    n_part = int(labels.max()) + 1
-
-    # 3. floorplan + constraints (Sec. II-C)
-    fp = grid_floorplan(labels, array_n)
-
-    # 4. static scheme (Algorithm 1): ascending voltages; highest-slack
-    #    cluster (=0) takes the lowest rail.
-    v_bands = static_voltage_scaling(v_min, v_crash, n_part)
-    part_slack = partition_min_slack(labels, slack)
-    static_v = assign_partition_voltages(part_slack, v_bands)
-    fp = fp.with_voltages(static_v)
-
-    # 5. runtime scheme (Algorithm 2) with Razor trials
-    sim = SystolicSim(tm, fp, RazorConfig(clock_ns=clock_ns))
-    v_s = (v_min - v_crash) / n_part
-    runtime_v = static_v.copy()
-    trials = 0
-    fail_free = True
-    if calibrate:
-        scheme = RuntimeScheme(v_s=v_s, v_floor=v_crash, v_ceil=max(v_min, node.v_nom))
-
-        def trial(v: np.ndarray) -> np.ndarray:
-            nonlocal trials
-            trials += 1
-            return sim.trial_run(v, seed=seed + trials)
-
-        runtime_v = scheme.calibrate(static_v, trial, max_trials=max_trials)
-        fail_free = not sim.trial_run(runtime_v, seed=seed + 10_000).any()
-
-    # 6. power (Sec. V-C)
-    pm = model_for(tech, freq_mhz=freq_mhz)
-    frac = np.bincount(labels, minlength=n_part) / labels.size
-    baseline = pm.baseline_mw(array_n, node.v_nom)
-    static_mw = pm.partitioned_mw(array_n, static_v, frac, v_ref=node.v_nom)
-    runtime_mw = pm.partitioned_mw(array_n, runtime_v, frac, v_ref=node.v_nom)
-
-    return FlowReport(
-        array_n=array_n, tech=tech, algo=algo, n_partitions=n_part,
-        labels=labels, min_slack=slack, floorplan=fp.with_voltages(runtime_v),
-        static_v=static_v, runtime_v=runtime_v,
-        baseline_mw=baseline, static_mw=static_mw, runtime_mw=runtime_mw,
-        static_reduction_pct=100.0 * (1 - static_mw / baseline),
-        runtime_reduction_pct=100.0 * (1 - runtime_mw / baseline),
-        xdc=generate_xdc(fp, clock_ns), sdc=generate_sdc(fp, clock_ns),
-        razor_trials=trials, calibrated_fail_free=bool(fail_free),
-    )
+    Deprecated: equivalent to ``repro.flow.run(FlowConfig(...))``, which also
+    exposes stage composition, artifact caching and sweeps.
+    """
+    from ..flow import FlowConfig, run
+    # legacy behaviour: falsy n_clusters (0/None) meant "use the default 4"
+    return run(FlowConfig(
+        array_n=array_n, tech=tech, algo=algo, n_clusters=n_clusters or None,
+        clock_ns=clock_ns, seed=seed, v_min=v_min, v_crash=v_crash,
+        freq_mhz=freq_mhz, calibrate=calibrate, max_trials=max_trials))
 
 
 def paper_table2_flow(array_n: int, tech: str) -> Dict[str, float]:

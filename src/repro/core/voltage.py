@@ -53,6 +53,34 @@ def assign_partition_voltages(cluster_mean_slack: Sequence[float],
     return v
 
 
+class CalibrationResult(np.ndarray):
+    """Calibrated per-partition voltages with an explicit convergence flag.
+
+    Behaves exactly like the ``(P,)`` float array of voltages (it *is* one),
+    plus ``converged``: a ``(P,)`` bool array that is False for partitions
+    that never produced a clean trial run within ``max_trials`` — those rails
+    are pinned at ``v_ceil`` as a safe fallback, and callers should treat
+    them as uncalibrated rather than trusting the substituted value.
+    """
+
+    converged: np.ndarray
+
+    @classmethod
+    def wrap(cls, v: np.ndarray, converged: np.ndarray) -> "CalibrationResult":
+        out = np.asarray(v, dtype=np.float64).view(cls)
+        out.converged = np.asarray(converged, dtype=bool)
+        return out
+
+    def __array_finalize__(self, obj) -> None:
+        if obj is None:
+            return
+        self.converged = getattr(obj, "converged", None)
+
+    @property
+    def all_converged(self) -> bool:
+        return bool(np.all(self.converged))
+
+
 @dataclasses.dataclass
 class RuntimeScheme:
     """Algorithm 2 with the trial-run convergence wrapper.
@@ -91,12 +119,16 @@ class RuntimeScheme:
 
     def calibrate(self, v0: np.ndarray,
                   trial: Callable[[np.ndarray], np.ndarray],
-                  max_trials: int = 64) -> np.ndarray:
+                  max_trials: int = 64) -> CalibrationResult:
         """Run trial runs until each partition oscillates (paper's pre-run
         tuning).  ``trial(v) -> per-partition fail flags``.
 
         Locks each partition at the upper rail of its final oscillation, i.e.
-        the lowest voltage that produced a clean run.
+        the lowest voltage that produced a clean run.  Returns a
+        :class:`CalibrationResult` — an ndarray of voltages whose
+        ``converged`` attribute is False for partitions that never saw a
+        clean trial (their rail is pinned at ``v_ceil``, explicitly flagged
+        instead of silently substituted).
         """
         v = np.asarray(v0, dtype=np.float64).copy()
         last_clean = np.full(len(v), np.nan)
@@ -112,8 +144,9 @@ class RuntimeScheme:
             if np.all((~np.isnan(last_clean)) & (seen_fail | at_floor_clean)):
                 break
             v = self.step(v, flags)
+        converged = ~np.isnan(last_clean)
         out = np.where(np.isnan(last_clean), self.v_ceil, last_clean)
-        return out
+        return CalibrationResult.wrap(out, converged)
 
 
 def runtime_voltage_scaling(v: np.ndarray, fail_flags: np.ndarray, v_s: float,

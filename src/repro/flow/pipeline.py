@@ -1,0 +1,132 @@
+"""Composable stage pipeline with artifact-prefix caching.
+
+A :class:`Pipeline` is an ordered chain of :class:`~repro.flow.stages.Stage`
+objects.  ``run(config)`` threads an :class:`~repro.flow.artifacts.Artifacts`
+value through the chain; with an :class:`~repro.flow.artifacts.ArtifactStore`
+attached, every stage's output delta is cached under ``(stage name,
+fingerprint of all config fields any stage so far depends on)`` — so two
+configs that differ only in a *later* stage's fields (say, the clustering
+algorithm) share the expensive timing prefix instead of recomputing it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
+
+from .artifacts import Artifacts, ArtifactStore
+from .config import FlowConfig
+from .stages import Stage, default_stages
+
+
+class Pipeline:
+    """An ordered, editable chain of flow stages."""
+
+    def __init__(self, stages: Optional[Sequence[Stage]] = None):
+        self.stages: List[Stage] = list(default_stages() if stages is None
+                                        else stages)
+        names = [s.name for s in self.stages]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate stage names: {names}")
+
+    # -- composition ---------------------------------------------------------
+
+    def _index(self, name: str) -> int:
+        for i, s in enumerate(self.stages):
+            if s.name == name:
+                return i
+        raise KeyError(f"no stage named {name!r}; have "
+                       f"{[s.name for s in self.stages]}")
+
+    def replace(self, name: str, stage: Stage) -> "Pipeline":
+        """New pipeline with the named stage swapped for ``stage``."""
+        out = list(self.stages)
+        out[self._index(name)] = stage
+        return Pipeline(out)
+
+    def without(self, *names: str) -> "Pipeline":
+        """New pipeline with the named stage(s) removed (skipped)."""
+        drop = set(names)
+        for n in drop:
+            self._index(n)                      # raise on unknown names
+        return Pipeline([s for s in self.stages if s.name not in drop])
+
+    def insert_after(self, name: str, stage: Stage) -> "Pipeline":
+        out = list(self.stages)
+        out.insert(self._index(name) + 1, stage)
+        return Pipeline(out)
+
+    def insert_before(self, name: str, stage: Stage) -> "Pipeline":
+        out = list(self.stages)
+        out.insert(self._index(name), stage)
+        return Pipeline(out)
+
+    def __repr__(self) -> str:
+        return f"Pipeline({[s.name for s in self.stages]})"
+
+    # -- validation ----------------------------------------------------------
+
+    def check(self, initial: Iterable[str] = ()) -> None:
+        """Verify every stage's ``requires`` is satisfied by earlier stages
+        (or by artifacts provided up front).  Raises ``ValueError`` early
+        instead of failing mid-run."""
+        have = set(initial)
+        for s in self.stages:
+            missing = set(s.requires) - have
+            if missing:
+                raise ValueError(
+                    f"stage {s.name!r} requires {sorted(missing)} but only "
+                    f"{sorted(have)} are available; reorder or provide them")
+            have |= set(s.provides)
+
+    # -- execution -----------------------------------------------------------
+
+    def run(self, cfg: Optional[FlowConfig] = None, *,
+            store: Optional[ArtifactStore] = None,
+            initial: Optional[Artifacts] = None,
+            upto: Optional[str] = None) -> Artifacts:
+        """Execute the chain on ``cfg`` and return the final artifacts.
+
+        ``store``   — cross-run cache; unchanged stage prefixes short-circuit.
+                      A cached entry is only reused when the *whole upstream
+                      stage chain* (implementations + relevant config fields)
+                      matches; replacing or inserting a stage invalidates it
+                      and everything downstream.
+        ``initial`` — artifacts provided up front (stages may consume them).
+                      Non-empty initial artifacts disable the store for this
+                      run: their contents are not part of the cache key, so
+                      reusing cached outputs would be unsound.
+        ``upto``    — stop after the named stage (inclusive), e.g. run just
+                      the timing+clustering prefix.
+        """
+        cfg = FlowConfig() if cfg is None else cfg
+        art = Artifacts() if initial is None else initial
+        self.check(initial=art.keys())
+
+        stop = len(self.stages) if upto is None else self._index(upto) + 1
+        use_store = (store is not None and hasattr(cfg, "fingerprint")
+                     and len(art) == 0)
+        upstream_keys: Tuple[str, ...] = ()
+        chain: Tuple[str, ...] = ()
+        for stage in self.stages[:stop]:
+            upstream_keys = tuple(dict.fromkeys(upstream_keys
+                                                + tuple(stage.config_keys)))
+            chain = chain + (stage.cache_token(),)
+            if use_store:
+                key = (stage.name, (chain, cfg.fingerprint(upstream_keys)))
+                delta = store.get(key)
+                if delta is None:
+                    new = stage.run(art, cfg)
+                    delta = new.delta_from(art)
+                    store.put(key, delta)
+                art = art.merged(delta)
+            else:
+                art = stage.run(art, cfg)
+        return art
+
+
+def execute(cfg: Optional[FlowConfig] = None, *,
+            pipeline: Optional[Pipeline] = None,
+            store: Optional[ArtifactStore] = None) -> Artifacts:
+    """One-call convenience: run ``cfg`` through ``pipeline`` (default: the
+    canonical Fig. 9 chain) and return every artifact."""
+    return (pipeline or Pipeline()).run(cfg, store=store)

@@ -18,8 +18,9 @@ from typing import Dict, List
 import numpy as np
 
 from ..configs import ARCHS, SHAPES, cell_is_runnable, get_config
-from ..core import run_flow, model_for
+from ..core import model_for
 from ..core.precision import ENERGY_PER_MAC, TIERS
+from ..flow import ArtifactStore, FlowConfig, FlowReport, run
 from .analytic import model_flops
 
 ART = Path(__file__).resolve().parents[3] / "artifacts"
@@ -42,15 +43,15 @@ class PowerRow:
     precision_saving_pct: float
 
 
-_FLOW_CACHE: Dict[str, object] = {}
+# Shared artifact store: repeated power_row() calls (any tech) reuse every
+# cached stage output instead of re-running the Fig. 9 flow per call.
+_STORE = ArtifactStore()
 
 
-def _flow(tech: str = "vtr-22nm"):
-    if tech not in _FLOW_CACHE:
-        # one 128x128 virtual array per MXU; paper flow with DBSCAN
-        _FLOW_CACHE[tech] = run_flow(array_n=64, tech=tech, algo="dbscan",
-                                     seed=2021, max_trials=24)
-    return _FLOW_CACHE[tech]
+def _flow(tech: str = "vtr-22nm") -> FlowReport:
+    # one 128x128 virtual array per MXU; paper flow with DBSCAN
+    return run(FlowConfig(array_n=64, tech=tech, algo="dbscan",
+                          seed=2021, max_trials=24), store=_STORE)
 
 
 def power_row(arch: str, shape_name: str, tech: str = "vtr-22nm") -> PowerRow:

@@ -1,3 +1,4 @@
-"""Fault tolerance: heartbeats, straggler detection, elastic remapping."""
-from .monitor import (ElasticPlan, HeartbeatMonitor, HostState,
-                      StragglerReport, plan_elastic_remap)
+"""Fault tolerance: heartbeats, straggler detection, elastic remapping, and
+the repro.flow voltage-recalibration watchdog."""
+from .monitor import (CalibrationWatchdog, ElasticPlan, HeartbeatMonitor,
+                      HostState, StragglerReport, plan_elastic_remap)

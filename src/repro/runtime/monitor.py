@@ -10,7 +10,11 @@ Control flow at scale:
     as stragglers (candidates for preemptive replacement);
   * on failure, ``ElasticPlan`` recomputes the largest usable mesh from the
     survivors, remaps data shards, and the trainer restores the last
-    checkpoint (the deterministic data pipeline replays exactly).
+    checkpoint (the deterministic data pipeline replays exactly);
+  * :class:`CalibrationWatchdog` extends the same pattern to the paper's
+    voltage islands: persistent Razor fail flags on a partition in
+    production trigger a re-run of the :mod:`repro.flow` runtime-calibration
+    stage (with cached upstream artifacts) to re-tune the rails.
 """
 
 from __future__ import annotations
@@ -18,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -125,3 +131,86 @@ def plan_elastic_remap(alive: Sequence[int], model_parallel: int,
     dropped = tuple(h for h in alive if h not in mapping)
     return ElasticPlan(data_parallel=dp, model_parallel=model_parallel,
                        host_to_shard=mapping, dropped_hosts=dropped)
+
+
+# ---------------------------------------------------------------------------
+# Voltage-island calibration watchdog (repro.flow integration)
+# ---------------------------------------------------------------------------
+
+
+class CalibrationWatchdog:
+    """Heartbeat-style guard for the flow's runtime voltage scheme.
+
+    In production the calibrated rails from the
+    ``runtime_calibration`` stage can drift out of date (temperature,
+    ageing, workload shift).  This watchdog consumes per-partition Razor
+    fail flags each serving step — the same signal Algorithm 2 uses — and,
+    when a partition fails ``patience`` consecutive steps (or its initial
+    calibration never converged), re-runs the calibration stage through
+    :mod:`repro.flow` with a bumped trial seed.  The shared artifact store
+    means only calibration + downstream stages re-execute; the timing /
+    clustering / floorplan prefix is reused from cache.
+    """
+
+    def __init__(self, config, patience: int = 3, store=None,
+                 max_unconverged_retries: int = 3):
+        from ..flow import ArtifactStore
+        self.config = config
+        self.patience = patience
+        self.max_unconverged_retries = max_unconverged_retries
+        self.store = store if store is not None else ArtifactStore()
+        self.recalibrations = 0
+        self._unconverged_retries = 0
+        self.report = self._run(seed_bump=0)
+        self._streak = np.zeros(self.report.n_partitions, dtype=np.int64)
+
+    def _run(self, seed_bump: int):
+        from ..flow import run
+        cfg = self.config
+        if seed_bump:
+            # re-roll only the Razor trials: the timing/clustering prefix
+            # stays cache-valid because ``seed`` itself is untouched
+            cfg = cfg.replace(
+                calibration_seed=cfg.resolved_calibration_seed() + seed_bump)
+        return run(cfg, store=self.store)
+
+    @property
+    def runtime_v(self) -> np.ndarray:
+        return np.asarray(self.report.runtime_v)
+
+    def needs_recalibration(self) -> np.ndarray:
+        """(P,) bool: partitions whose initial calibration never converged."""
+        conv = self.report.calibration_converged
+        if conv is None:
+            return np.zeros(self.report.n_partitions, dtype=bool)
+        return ~np.asarray(conv, dtype=bool)
+
+    def observe(self, partition_fail_flags: Sequence[bool]):
+        """Feed one serving step's per-partition Razor flags.
+
+        Returns the fresh ``FlowReport`` when a recalibration was triggered
+        (persistent failures or an unconverged initial calibration), else
+        ``None`` — mirroring ``HeartbeatMonitor.check_dead``'s "act only on
+        persistent signals" contract.
+        """
+        flags = np.asarray(partition_fail_flags, dtype=bool)
+        if flags.shape != self._streak.shape:
+            raise ValueError(
+                f"expected {self._streak.shape[0]} partition flags, "
+                f"got {flags.shape}")
+        self._streak = np.where(flags, self._streak + 1, 0)
+        persistent_fail = bool((self._streak >= self.patience).any())
+        # an unconverged initial calibration warrants a bounded number of
+        # re-rolls — not one per serving step, or a config that can never
+        # converge would pay a full calibration every observe()
+        retry_unconverged = (self.needs_recalibration().any()
+                             and self._unconverged_retries
+                             < self.max_unconverged_retries)
+        if not (persistent_fail or retry_unconverged):
+            return None
+        if not persistent_fail:
+            self._unconverged_retries += 1
+        self.recalibrations += 1
+        self.report = self._run(seed_bump=self.recalibrations)
+        self._streak = np.zeros(self.report.n_partitions, dtype=np.int64)
+        return self.report

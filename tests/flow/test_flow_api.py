@@ -1,0 +1,258 @@
+"""repro.flow: config serialization, stage composition, caching, reports."""
+
+import numpy as np
+import pytest
+
+from repro.core import quadrant_floorplan, run_flow
+from repro.core.voltage import CalibrationResult, RuntimeScheme
+from repro.flow import (Artifacts, ArtifactStore, FlowConfig, FunctionStage,
+                        Pipeline, execute, get_stage, report_from, run)
+
+CHEAP = dict(array_n=8, tech="vtr-22nm", max_trials=12, seed=2021)
+
+
+# ---------------------------------------------------------------- config ----
+
+def test_config_roundtrip_serialization():
+    cfg = FlowConfig(array_n=32, tech="vtr-45nm", algo="meanshift",
+                     n_clusters=None, max_trials=7,
+                     algo_params={"bandwidth": 0.3})
+    again = FlowConfig.from_dict(cfg.to_dict())
+    assert again == cfg
+    assert FlowConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_config_normalizes_algo_aliases():
+    assert FlowConfig(algo="K-Means").algo == "kmeans"
+    assert FlowConfig(algo="mean-shift").algo == "meanshift"
+
+
+def test_config_validation_errors():
+    with pytest.raises(ValueError, match="tech"):
+        FlowConfig(tech="tsmc-3nm")
+    with pytest.raises(ValueError, match="algorithm"):
+        FlowConfig(algo="spectral")
+    with pytest.raises(ValueError, match="array_n"):
+        FlowConfig(array_n=0)
+    with pytest.raises(ValueError, match="V_min"):
+        FlowConfig(v_min=0.5, v_crash=0.9)
+    with pytest.raises(ValueError, match="unknown FlowConfig fields"):
+        FlowConfig.from_dict({"array": 16})
+
+
+def test_config_replace_revalidates():
+    cfg = FlowConfig()
+    assert cfg.replace(algo="kmeans").algo == "kmeans"
+    with pytest.raises(ValueError):
+        cfg.replace(max_trials=-1)
+
+
+# ------------------------------------------------------------- artifacts ----
+
+def test_artifacts_are_append_only_and_raise_helpfully():
+    art = Artifacts({"a": 1})
+    art2 = art.with_(b=2)
+    assert "b" not in art and art2["b"] == 2 and art2.a == 1
+    with pytest.raises(KeyError, match="available"):
+        art["missing"]
+    with pytest.raises(AttributeError, match="available"):
+        art.missing
+    assert art2.delta_from(art) == {"b": 2}
+
+
+# ------------------------------------------------------ pipeline parity -----
+
+def test_pipeline_matches_run_flow_wrapper():
+    """The deprecated monolith wrapper and the explicit pipeline must agree
+    bit for bit (same seeds -> same voltages/power/constraints)."""
+    old = run_flow(array_n=16, tech="vivado-28nm", algo="dbscan", seed=2021)
+    cfg = FlowConfig(array_n=16, tech="vivado-28nm", algo="dbscan", seed=2021)
+    new = report_from(Pipeline().run(cfg), cfg)
+    np.testing.assert_array_equal(old.labels, new.labels)
+    np.testing.assert_array_equal(old.static_v, new.static_v)
+    np.testing.assert_array_equal(np.asarray(old.runtime_v),
+                                  np.asarray(new.runtime_v))
+    assert old.baseline_mw == new.baseline_mw
+    assert old.static_mw == new.static_mw
+    assert old.runtime_mw == new.runtime_mw
+    assert old.xdc == new.xdc and old.sdc == new.sdc
+    assert old.razor_trials == new.razor_trials
+
+
+# ------------------------------------------------- composition: replace -----
+
+def test_stage_replacement_quadrant_cluster():
+    """Swap the clustering stage for a fixed quadrant partitioning; the rest
+    of the flow runs unchanged on the injected labels."""
+    def quadrant_labels(art, cfg):
+        labels = quadrant_floorplan(cfg.array_n).partition_of_mac()
+        return art.with_(labels=labels, n_partitions=4,
+                         n_partitions_requested=4)
+
+    pipe = Pipeline().replace("cluster", FunctionStage(
+        "cluster", quadrant_labels, requires=("slack",),
+        provides=("labels", "n_partitions", "n_partitions_requested")))
+    cfg = FlowConfig(**CHEAP)
+    rep = report_from(pipe.run(cfg), cfg)
+    assert rep.n_partitions == 4
+    np.testing.assert_array_equal(
+        np.bincount(rep.labels), [16, 16, 16, 16])
+    assert len(rep.static_v) == 4
+    assert rep.xdc.count("create_pblock") == 4
+
+
+def test_stage_insert_after():
+    seen = {}
+
+    def probe(art, cfg):
+        seen["n"] = art.n_partitions
+        return art
+
+    pipe = Pipeline().insert_after("cluster", FunctionStage(
+        "probe", probe, requires=("n_partitions",)))
+    pipe.run(FlowConfig(**CHEAP))
+    assert seen["n"] >= 1
+
+
+# ----------------------------------------------------- composition: skip ----
+
+def test_stage_skip_runtime_calibration():
+    """Without the calibration stage the report falls back to the static
+    scheme: runtime voltages/power mirror static, zero Razor trials."""
+    cfg = FlowConfig(**CHEAP)
+    pipe = Pipeline().without("runtime_calibration")
+    rep = report_from(pipe.run(cfg), cfg)
+    np.testing.assert_array_equal(np.asarray(rep.runtime_v), rep.static_v)
+    assert rep.runtime_mw == rep.static_mw
+    assert rep.razor_trials == 0
+    assert rep.calibration_converged is None
+
+
+def test_stage_skip_constraints():
+    cfg = FlowConfig(**CHEAP)
+    rep = report_from(Pipeline().without("constraints").run(cfg), cfg)
+    assert rep.xdc == "" and rep.sdc == ""
+
+
+def test_pipeline_check_rejects_broken_order():
+    with pytest.raises(ValueError, match="requires"):
+        Pipeline().without("cluster").run(FlowConfig(**CHEAP))
+
+
+def test_stage_registry_constructs_by_name():
+    assert get_stage("timing").name == "timing"
+    with pytest.raises(KeyError, match="registered"):
+        get_stage("nonsense")
+
+
+# ------------------------------------------------------- prefix caching -----
+
+def test_artifact_prefix_caching_shares_timing():
+    """Two configs differing only in the clustering algorithm must reuse the
+    cached timing stage (same (tech, array_n, clock_ns, seed) prefix)."""
+    store = ArtifactStore()
+    a = execute(FlowConfig(algo="kmeans", **CHEAP), store=store)
+    b = execute(FlowConfig(algo="dbscan", **CHEAP), store=store)
+    assert store.runs_of("timing") == 1
+    assert store.stats["timing"].hits == 1
+    assert a.timing_model is b.timing_model        # the very same object
+    # a config change in the prefix invalidates it
+    execute(FlowConfig(algo="kmeans", **{**CHEAP, "seed": 5}), store=store)
+    assert store.runs_of("timing") == 2
+
+
+def test_replaced_stage_does_not_reuse_default_stage_cache():
+    """A replacement stage with the same name must not inherit the default
+    stage's cached output (the store keys on implementation identity)."""
+    store = ArtifactStore()
+    cfg = FlowConfig(**CHEAP)
+    Pipeline().run(cfg, store=store)
+
+    def one_cluster(art, c):
+        labels = np.zeros(c.array_n * c.array_n, dtype=np.int64)
+        return art.with_(labels=labels, n_partitions=1,
+                         n_partitions_requested=1)
+
+    pipe = Pipeline().replace("cluster", FunctionStage(
+        "cluster", one_cluster, requires=("slack",),
+        provides=("labels", "n_partitions", "n_partitions_requested"),
+        config_keys=("algo", "n_clusters", "seed", "algo_params")))
+    art = pipe.run(cfg, store=store)
+    assert art.n_partitions == 1                   # not the cached 4
+    assert len(art.static_v) == 1                  # downstream invalidated too
+    # the untouched timing prefix is still shared
+    assert store.runs_of("timing") == 1
+
+
+def test_initial_artifacts_bypass_store():
+    """Runs seeded with initial artifacts must not serve cached outputs —
+    the artifact contents are not part of the cache key."""
+    store = ArtifactStore()
+    double = FunctionStage("double", lambda a, c: a.with_(y=a.x * 2),
+                           requires=("x",), provides=("y",))
+    pipe = Pipeline([double])
+    a = pipe.run(FlowConfig(), store=store, initial=Artifacts({"x": 1}))
+    b = pipe.run(FlowConfig(), store=store, initial=Artifacts({"x": 21}))
+    assert (a.y, b.y) == (2, 42)
+    assert len(store) == 0
+
+
+def test_cached_rerun_is_bitwise_identical():
+    store = ArtifactStore()
+    cfg = FlowConfig(**CHEAP)
+    first = report_from(execute(cfg, store=store), cfg)
+    second = report_from(execute(cfg, store=store), cfg)
+    assert store.stats["power"].hits == 1
+    np.testing.assert_array_equal(np.asarray(first.runtime_v),
+                                  np.asarray(second.runtime_v))
+    assert first.xdc == second.xdc
+
+
+# ------------------------------------- satellite: requested vs actual P -----
+
+def test_density_algorithms_surface_actual_partition_count():
+    """meanshift/DBSCAN pick their own cluster count; the report now carries
+    both the requested and the actual number instead of silently diverging."""
+    cfg = FlowConfig(array_n=16, tech="vivado-28nm", algo="dbscan",
+                     n_clusters=7, seed=2021)
+    rep = run(cfg)
+    assert rep.n_partitions_requested == 7
+    assert rep.n_partitions != 7            # dbscan found its own bands
+    assert f"req {rep.n_partitions_requested}" in rep.summary()
+    # partition-count-dependent artifacts follow the *actual* count
+    assert len(rep.static_v) == rep.n_partitions
+    assert rep.xdc.count("create_pblock") == rep.n_partitions
+
+
+def test_kmeans_honors_requested_partition_count():
+    rep = run(FlowConfig(algo="kmeans", n_clusters=3, **CHEAP))
+    assert rep.n_partitions_requested == 3
+    assert rep.n_partitions == 3
+    assert "req" not in rep.summary()
+
+
+# --------------------------------- satellite: calibration converged flag ----
+
+def test_calibrate_flags_partitions_without_clean_trials():
+    scheme = RuntimeScheme(v_s=0.05, v_floor=0.5, v_ceil=1.0)
+    out = scheme.calibrate(np.array([0.9, 0.9]),
+                           lambda v: np.array([True, False]), max_trials=8)
+    assert isinstance(out, CalibrationResult)
+    np.testing.assert_array_equal(out.converged, [False, True])
+    assert not out.all_converged
+    assert out[0] == 1.0                    # pinned at v_ceil, but flagged
+
+
+def test_calibrate_converged_when_clean():
+    scheme = RuntimeScheme(v_s=0.05, v_floor=0.5, v_ceil=1.0)
+    out = scheme.calibrate(np.array([0.9, 0.9]),
+                           lambda v: np.zeros(2, dtype=bool), max_trials=32)
+    assert out.all_converged
+    np.testing.assert_allclose(np.asarray(out), 0.5)
+
+
+def test_flow_report_carries_convergence():
+    rep = run(FlowConfig(**CHEAP))
+    assert rep.calibration_converged is not None
+    assert rep.calibration_converged.shape == (rep.n_partitions,)
+    assert rep.calibration_converged.dtype == bool

@@ -1,0 +1,106 @@
+"""repro.flow.sweep: grid expansion, shared-prefix caching, tidy tables, CLI."""
+
+import numpy as np
+import pytest
+
+from repro.flow import FlowConfig, expand_grid, sweep
+from repro.flow.__main__ import main as flow_main
+
+BASE = FlowConfig(array_n=8, max_trials=12, seed=2021)
+
+
+def test_expand_grid_product_and_order():
+    cfgs = expand_grid({"tech": ["vivado-28nm", "vtr-22nm"],
+                        "algo": ["kmeans", "dbscan"]}, BASE)
+    assert len(cfgs) == 4
+    # last axis varies fastest
+    assert [(c.tech, c.algo) for c in cfgs] == [
+        ("vivado-28nm", "kmeans"), ("vivado-28nm", "dbscan"),
+        ("vtr-22nm", "kmeans"), ("vtr-22nm", "dbscan")]
+    assert all(c.array_n == 8 for c in cfgs)
+
+
+def test_expand_grid_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown FlowConfig field"):
+        expand_grid({"technology": ["vtr-22nm"]})
+
+
+def test_sweep_two_tech_two_algo_shares_timing():
+    """Acceptance slice: >= 2 tech nodes x 2 algorithms in one process with
+    the timing stage computed once per (tech, array_n, seed) triple."""
+    res = sweep({"tech": ["vivado-28nm", "vtr-22nm"],
+                 "algo": ["kmeans", "hierarchical"]}, BASE)
+    assert len(res.reports) == 4
+    assert res.timing_stage_runs() == 2            # once per tech
+    assert res.store.stats["timing"].hits == 2
+    rows = res.rows()
+    assert {r["tech"] for r in rows} == {"vivado-28nm", "vtr-22nm"}
+    # same tech + same labels -> identical static power across algorithms
+    by_tech = {}
+    for r in rows:
+        by_tech.setdefault(r["tech"], set()).add(round(r["static_mw"], 9))
+    for tech, vals in by_tech.items():
+        assert len(vals) == 1, (tech, vals)
+
+
+def test_sweep_full_grid_four_tech_four_algo():
+    """Acceptance: the full 4 tech x 4 algorithm grid completes in one
+    process with the timing stage computed once per (tech, array_n, seed)."""
+    res = sweep({"tech": ["vivado-28nm", "vtr-22nm", "vtr-45nm", "vtr-130nm"],
+                 "algo": ["kmeans", "hierarchical", "meanshift", "dbscan"]},
+                BASE)
+    assert len(res.reports) == 16
+    assert res.timing_stage_runs() == 4
+    assert all(r["calibrated_fail_free"] for r in res.rows())
+
+
+def test_sweep_accepts_explicit_config_list():
+    cfgs = [BASE, BASE.replace(algo="kmeans")]
+    res = sweep(cfgs)
+    assert [r.algo for r in res.reports] == ["dbscan", "kmeans"]
+    assert res.timing_stage_runs() == 1
+
+
+def test_sweep_table_renders_tidy_columns():
+    res = sweep({"algo": ["kmeans", "dbscan"]}, BASE)
+    table = res.table()
+    lines = table.splitlines()
+    assert "tech" in lines[0] and "runtime_reduction_pct" in lines[0]
+    assert len(lines) == 2 + len(res.reports)      # header + rule + rows
+    assert res.best()["runtime_reduction_pct"] == max(
+        r["runtime_reduction_pct"] for r in res.rows())
+
+
+def test_sweep_array_sizes_change_baseline():
+    res = sweep({"array_n": [8, 16]}, BASE)
+    rows = res.rows()
+    assert rows[1]["baseline_mw"] > rows[0]["baseline_mw"]
+    assert res.timing_stage_runs() == 2            # distinct prefix per size
+
+
+# ----------------------------------------------------------------- CLI ------
+
+def test_cli_run_smoke(capsys):
+    rc = flow_main(["run", "--array-n", "8", "--tech", "vtr-22nm",
+                    "--algo", "kmeans", "--max-trials", "8"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "8x8 vtr-22nm kmeans" in out
+    assert "runtime V_ccint" in out and "power: baseline" in out
+
+
+def test_cli_sweep_smoke(capsys):
+    rc = flow_main(["sweep", "--tech", "vivado-28nm,vtr-22nm",
+                    "--algo", "kmeans,dbscan", "--array-n", "8",
+                    "--max-trials", "8"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "timing stage executed 2x" in out
+    assert "best runtime reduction" in out
+
+
+def test_cli_no_calibrate(capsys):
+    rc = flow_main(["run", "--array-n", "8", "--no-calibrate"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "razor trials: 0" in out

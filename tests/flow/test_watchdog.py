@@ -1,0 +1,67 @@
+"""CalibrationWatchdog: flow-integrated voltage recalibration on Razor flags."""
+
+import numpy as np
+import pytest
+
+from repro.flow import FlowConfig
+from repro.runtime import CalibrationWatchdog
+
+
+@pytest.fixture(scope="module")
+def watchdog():
+    return CalibrationWatchdog(
+        FlowConfig(array_n=8, tech="vtr-22nm", max_trials=12, seed=2021),
+        patience=2)
+
+
+def test_watchdog_initial_calibration(watchdog):
+    assert watchdog.runtime_v.shape == (watchdog.report.n_partitions,)
+    assert watchdog.recalibrations == 0
+    assert not watchdog.needs_recalibration().any()
+
+
+def test_watchdog_recalibrates_on_persistent_flags(watchdog):
+    p = watchdog.report.n_partitions
+    clean = [False] * p
+    noisy = [True] + [False] * (p - 1)
+    assert watchdog.observe(clean) is None
+    assert watchdog.observe(noisy) is None          # streak 1 < patience
+    report = watchdog.observe(noisy)                # streak 2 -> recalibrate
+    assert report is not None
+    assert watchdog.recalibrations == 1
+    # only the calibration suffix re-ran: the timing prefix stayed cached
+    assert watchdog.store.runs_of("timing") == 1
+    assert watchdog.store.runs_of("runtime_calibration") == 2
+
+
+def test_watchdog_transient_flags_are_tolerated(watchdog):
+    p = watchdog.report.n_partitions
+    before = watchdog.recalibrations
+    assert watchdog.observe([True] * p) is None     # one bad step
+    assert watchdog.observe([False] * p) is None    # recovers -> streak reset
+    assert watchdog.observe([True] * p) is None
+    assert watchdog.recalibrations == before
+
+
+def test_watchdog_rejects_wrong_flag_count(watchdog):
+    with pytest.raises(ValueError, match="partition flags"):
+        watchdog.observe([True])
+
+
+def test_watchdog_unconverged_retries_are_bounded(monkeypatch):
+    """A calibration that can never converge must not recalibrate on every
+    clean serving step — retries are capped."""
+    wd = CalibrationWatchdog(
+        FlowConfig(array_n=8, tech="vtr-22nm", max_trials=12, seed=2021),
+        patience=2, max_unconverged_retries=2)
+    p = wd.report.n_partitions
+    monkeypatch.setattr(
+        type(wd), "needs_recalibration",
+        lambda self: np.ones(self.report.n_partitions, dtype=bool))
+    assert wd.observe([False] * p) is not None     # retry 1
+    assert wd.observe([False] * p) is not None     # retry 2 (cap)
+    assert wd.observe([False] * p) is None         # capped: no more re-runs
+    assert wd.recalibrations == 2
+    # persistent Razor failures still trigger, independent of the cap
+    assert wd.observe([True] * p) is None
+    assert wd.observe([True] * p) is not None
