@@ -232,23 +232,49 @@ def bench_power_report(fast: bool) -> List[Tuple[str, float, str]]:
 
 
 def bench_serve(fast: bool) -> List[Tuple[str, float, str]]:
-    """Smoke-model serving throughput (CPU)."""
+    """Continuous vs wave engine on one mixed smoke workload (CPU); writes
+    the full telemetry comparison to BENCH_serve.json."""
+    import json
+
     import jax
     from repro.configs import get_config
     from repro.models import model_api
-    from repro.serve import Request, ServeEngine
+    from repro.serve import Request, ServeEngine, WaveServeEngine
     cfg = get_config("starcoder2-3b", smoke=True)
     params = model_api(cfg).init_params(jax.random.PRNGKey(0))
+    n_req = 4 if fast else 8
 
-    def serve():
-        eng = ServeEngine(cfg, params, slots=2, max_len=48)
-        for uid in range(4):
-            eng.submit(Request(uid=uid, prompt=[3, 4, 5], max_new_tokens=4))
-        return eng.run_until_drained()
+    def workload():
+        return [Request(uid=uid,
+                        prompt=rng.integers(3, cfg.vocab_size,
+                                            int(rng.integers(1, 7))).tolist(),
+                        max_new_tokens=int(rng.integers(2, 8)))
+                for uid in range(n_req)]
 
-    us, stats = _time_us(serve, repeats=1)
-    return [("serve/smoke_4req", us,
-             f"tok_per_s={stats.tokens_generated / (us / 1e6):.1f}")]
+    rows, payload = [], {"arch": cfg.name, "requests": n_req, "slots": 2,
+                         "max_len": 48}
+    for name, engine_cls in (("continuous", ServeEngine),
+                             ("wave", WaveServeEngine)):
+        rng = np.random.default_rng(0)          # identical request sets
+
+        def serve(engine_cls=engine_cls):
+            eng = engine_cls(cfg, params, slots=2, max_len=48)
+            for req in workload():
+                eng.submit(req)
+            return eng.run_until_drained()
+
+        us, stats = _time_us(serve, repeats=1)
+        payload[name] = {"us_per_call": us, **stats.to_dict()}
+        rows.append((f"serve/{name}_{n_req}req", us,
+                     f"model_steps={stats.model_steps}"
+                     f"_tok_per_s={stats.tokens_generated / (us / 1e6):.1f}"))
+    saved = 1 - payload["continuous"]["model_steps"] \
+        / max(payload["wave"]["model_steps"], 1)
+    payload["model_steps_saved_frac"] = saved
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(("serve/steps_saved", 0.0, f"saved_frac={saved:.2f}"))
+    return rows
 
 
 def bench_accuracy_voltage(fast: bool) -> List[Tuple[str, float, str]]:

@@ -41,13 +41,18 @@ t0 = time.time()
 stats = engine.run_until_drained()
 dt = time.time() - t0
 print(f"served {stats.completed} requests / {stats.tokens_generated} tokens "
-      f"in {stats.waves} waves, {dt:.1f}s")
+      f"in {stats.prefill_steps} prefill + {stats.decode_steps} decode model "
+      f"steps, {dt:.1f}s")
 for r in reqs[:3]:
     print(f"  req {r.uid}: {r.prompt} -> {r.out_tokens}")
 
-# --- paper power model for the decode work just performed
-decode_shape = ShapeConfig("serve", 64, 2, "decode")
-macs = forward_flops(cfg, decode_shape) / 2 * stats.decode_steps
+# --- paper power model for the serving work just performed: token-positions
+# processed = absorbed prompt tokens (batch-1 prefill) + 2 slots per batched
+# decode step, each priced at the one-token batch-1 forward cost
+per_tok_shape = ShapeConfig("serve", 64, 1, "decode")
+prompt_toks = sum(len(r.prompt) for r in reqs)
+macs = forward_flops(cfg, per_tok_shape) / 2 \
+    * (prompt_toks + 2 * stats.decode_steps)
 flow = run_flow(array_n=16, tech="vtr-22nm", algo="dbscan", seed=2021)
 pm = model_for("vtr-22nm")
 frac = np.bincount(flow.labels, minlength=flow.n_partitions) / flow.labels.size

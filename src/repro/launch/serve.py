@@ -1,12 +1,26 @@
-"""Serving launcher: batched requests through the wave engine.
+"""Serving launcher: batched requests through the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
         --smoke --requests 6 --slots 2 --max-new 8
+
+Flags:
+    --engine {continuous,wave}   continuous (default) admits a request into
+                                 any free slot mid-flight; wave is the legacy
+                                 static batcher kept as a baseline
+    --requests / --slots         workload size / decode slots
+    --max-new                    max new tokens per request (randomized per
+                                 request when --mixed is set)
+    --max-len                    decode cache length
+    --max-steps                  model-call budget for run_until_drained;
+                                 exhaustion reports truncated/unserved counts
+    --json-out PATH              dump full EngineStats telemetry as JSON
+                                 (prefill/decode steps, TTFT, occupancy, ...)
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -14,43 +28,67 @@ import numpy as np
 
 from ..configs import ARCHS, get_config
 from ..models import model_api
-from ..serve import Request, ServeEngine
+from ..serve import Request, ServeEngine, WaveServeEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", choices=("continuous", "wave"),
+                    default="continuous")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--mixed", action="store_true",
+                    help="randomize max_new_tokens per request (1..max-new)")
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-steps", type=int, default=10_000)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", type=str, default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     api = model_api(cfg)
     params = api.init_params(jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    engine_cls = ServeEngine if args.engine == "continuous" else WaveServeEngine
+    engine = engine_cls(cfg, params, slots=args.slots, max_len=args.max_len)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
     for uid in range(args.requests):
         plen = int(rng.integers(2, 8))
         prompt = rng.integers(3, cfg.vocab_size, plen).tolist()
-        req = Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new)
+        max_new = (int(rng.integers(1, args.max_new + 1)) if args.mixed
+                   else args.max_new)
+        req = Request(uid=uid, prompt=prompt, max_new_tokens=max_new)
         reqs.append(req)
         engine.submit(req)
 
     t0 = time.time()
-    stats = engine.run_until_drained()
+    stats = engine.run_until_drained(max_steps=args.max_steps)
     dt = time.time() - t0
-    print(f"served {stats.completed} requests in {stats.waves} waves, "
-          f"{stats.tokens_generated} tokens, {stats.decode_steps} decode "
-          f"steps, {dt:.1f}s "
-          f"({stats.tokens_generated / max(dt, 1e-9):.1f} tok/s)")
+    occ = ", ".join(f"{o:.2f}" for o in stats.occupancy())
+    ttft = (f"{1e3 * sum(stats.ttft_s) / len(stats.ttft_s):.0f}ms"
+            if stats.ttft_s else "n/a")
+    print(f"[{args.engine}] served {stats.completed} completed / "
+          f"{stats.truncated} truncated / {stats.unserved} unserved; "
+          f"{stats.tokens_generated} tokens in {stats.prefill_steps} prefill "
+          f"+ {stats.decode_steps} decode model steps, {dt:.1f}s "
+          f"({stats.tokens_generated / max(dt, 1e-9):.1f} tok/s, "
+          f"mean TTFT {ttft}, occupancy [{occ}])")
     for r in reqs[:3]:
-        print(f"  req {r.uid}: prompt {r.prompt} -> {r.out_tokens}")
+        print(f"  req {r.uid}: prompt {r.prompt} -> {r.out_tokens}"
+              f"{' (truncated)' if r.truncated else ''}")
+    if args.json_out:
+        payload = {"arch": args.arch, "engine": args.engine,
+                   "slots": args.slots, "max_len": args.max_len,
+                   "requests": args.requests, "wall_s": dt,
+                   "tok_per_s": stats.tokens_generated / max(dt, 1e-9),
+                   **stats.to_dict()}
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json_out}")
 
 
 if __name__ == "__main__":

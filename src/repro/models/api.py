@@ -7,6 +7,10 @@
     api.decode_step(params, state, tokens) -> (logits, state)
     api.input_specs(shape) -> batch of ShapeDtypeStructs (+ logical shardings)
     api.decode_state_specs(shape) -> decode-state ParamSpecs
+    api.make_decode_state(shape) -> all-zeros decode state
+    api.slot_slice / slot_update / slot_reset -> per-slot state surgery
+        (continuous batching: one batch row is admitted/evicted without
+        recomputing the rest of the batch)
 """
 
 from __future__ import annotations
@@ -22,6 +26,8 @@ from . import encdec, lm, ssm
 from .shardlib import ParamSpec, init_param_tree
 
 Params = Dict[str, Any]
+
+_is_spec = lambda x: isinstance(x, ParamSpec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +148,54 @@ class ModelAPI:
         if f == "encdec":
             return encdec.decode_state_specs(cfg, b, s)
         raise ValueError(f)
+
+    # ---- per-slot state surgery (continuous batching) ------------------------
+    #
+    # Every decode-state leaf carries its logical axes in the spec tree, so the
+    # batch ("slot") axis can be located per leaf and one row sliced/scattered
+    # with a dynamic_slice — no per-family knowledge, no batch recompute.
+
+    def make_decode_state(self, shape: ShapeConfig) -> Params:
+        """All-zeros decode state matching ``decode_state_specs(shape)``."""
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.decode_state_specs(shape), is_leaf=_is_spec)
+
+    def slot_slice(self, shape: ShapeConfig, state: Params,
+                   slot: jax.Array) -> Params:
+        """Extract batch row ``slot`` of a decode state as a batch-1 state."""
+        def take(spec, leaf):
+            if "batch" not in spec.logical:
+                return leaf
+            ax = spec.logical.index("batch")
+            return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+        return jax.tree.map(take, self.decode_state_specs(shape), state,
+                            is_leaf=_is_spec)
+
+    def slot_update(self, shape: ShapeConfig, state: Params, slot: jax.Array,
+                    sub: Params) -> Params:
+        """Scatter a batch-1 sub-state (e.g. a fresh prefill) into row
+        ``slot``; every other slot's state is untouched."""
+        def put(spec, leaf, s):
+            if "batch" not in spec.logical:
+                return leaf
+            ax = spec.logical.index("batch")
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, s.astype(leaf.dtype), slot, axis=ax)
+        return jax.tree.map(put, self.decode_state_specs(shape), state, sub,
+                            is_leaf=_is_spec)
+
+    def slot_reset(self, shape: ShapeConfig, state: Params,
+                   slot: jax.Array) -> Params:
+        """Zero one slot's state (eviction) without recomputing the batch."""
+        def zero(spec, leaf):
+            if "batch" not in spec.logical:
+                return leaf
+            ax = spec.logical.index("batch")
+            shape1 = leaf.shape[:ax] + (1,) + leaf.shape[ax + 1:]
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, jnp.zeros(shape1, leaf.dtype), slot, axis=ax)
+        return jax.tree.map(zero, self.decode_state_specs(shape), state,
+                            is_leaf=_is_spec)
 
 
 def model_api(cfg: ModelConfig) -> ModelAPI:

@@ -129,7 +129,7 @@ def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int,
         "kv": self_kv,
         "mem_k": ParamSpec(mem_shape, jnp.bfloat16, mem_logical, init="zeros"),
         "mem_v": ParamSpec(mem_shape, jnp.bfloat16, mem_logical, init="zeros"),
-        "index": ParamSpec((), jnp.int32, (), init="zeros"),
+        "index": ParamSpec((batch,), jnp.int32, ("batch",), init="zeros"),
     }
 
 
@@ -165,7 +165,7 @@ def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
     logits = logits_last(x[:, -1:], params["embedding"])
     state = {"kv": {"k": caches["k"], "v": caches["v"]},
              "mem_k": caches["mk"], "mem_v": caches["mv"],
-             "index": jnp.int32(s)}
+             "index": jnp.full((b,), s, jnp.int32)}
     return logits, state
 
 

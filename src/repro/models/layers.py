@@ -290,35 +290,36 @@ def decode_attention(x: jax.Array, p: Params, cfg: ModelConfig,
     """One-token attention against a cache.
 
     x: (b, 1, d); kv: {"k", "v"[, "k_scale", "v_scale"]} with k/v of shape
-    (b, S, n_kv, dh); index: scalar position.  Returns (out, new kv dict).
+    (b, S, n_kv, dh); index: scalar position, or per-row (b,) positions —
+    continuous batching runs every slot at its own offset, so each batch row
+    writes its K/V at and masks against its own index.  Returns (out, new kv
+    dict).
     """
     b = x.shape[0]
-    pos = jnp.full((b, 1), index, dtype=jnp.int32)
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (b,))
+    pos = idx[:, None]
     q, k_new, v_new = _qkv(x, p, cfg, pos)
     int8 = "k_scale" in kv
 
     k_cache, v_cache = kv["k"], kv["v"]
-    slot = index
-    if cfg.sliding_window is not None and k_cache.shape[1] <= cfg.sliding_window:
-        slot = index % k_cache.shape[1]          # ring buffer for SWA
+    rows = jnp.arange(b)
+    ring = (cfg.sliding_window is not None
+            and k_cache.shape[1] <= cfg.sliding_window)
+    slot = idx % k_cache.shape[1] if ring else idx   # ring buffer for SWA
     if int8:
         kq, ks = _quant_kv(k_new)
         vq, vs = _quant_kv(v_new)
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, slot, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, slot, axis=1)
-        k_scale = jax.lax.dynamic_update_slice_in_dim(kv["k_scale"], ks, slot,
-                                                      axis=1)
-        v_scale = jax.lax.dynamic_update_slice_in_dim(kv["v_scale"], vs, slot,
-                                                      axis=1)
+        k_cache = k_cache.at[rows, slot].set(kq[:, 0])
+        v_cache = v_cache.at[rows, slot].set(vq[:, 0])
+        k_scale = kv["k_scale"].at[rows, slot].set(ks[:, 0])
+        v_scale = kv["v_scale"].at[rows, slot].set(vs[:, 0])
         k_full = (k_cache.astype(jnp.float32) * k_scale).astype(jnp.bfloat16)
         v_full = (v_cache.astype(jnp.float32) * v_scale).astype(jnp.bfloat16)
         new_kv = {"k": k_cache, "v": v_cache,
                   "k_scale": k_scale, "v_scale": v_scale}
     else:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot,
-                                                      axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot,
-                                                      axis=1)
+        k_cache = k_cache.at[rows, slot].set(k_new[:, 0])
+        v_cache = v_cache.at[rows, slot].set(v_new[:, 0])
         k_full, v_full = k_cache, v_cache
         new_kv = {"k": k_cache, "v": v_cache}
 
@@ -326,15 +327,16 @@ def decode_attention(x: jax.Array, p: Params, cfg: ModelConfig,
     v = _repeat_kv(v_full, cfg.n_heads)
     s = k.shape[1]
     k_pos = jnp.arange(s)
-    if cfg.sliding_window is not None and k_cache.shape[1] <= cfg.sliding_window:
-        valid = (k_pos <= slot) | (index >= s)   # ring: all valid once wrapped
+    if ring:
+        # ring: everything valid once the row has wrapped
+        valid = (k_pos[None, :] <= slot[:, None]) | (idx[:, None] >= s)
     else:
-        valid = k_pos <= index
+        valid = k_pos[None, :] <= idx[:, None]
         if cfg.sliding_window is not None:
-            valid &= k_pos > index - cfg.sliding_window
+            valid &= k_pos[None, :] > idx[:, None] - cfg.sliding_window
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
     scores = scores / jnp.sqrt(jnp.float32(cfg.d_head))
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     o = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, 1, cfg.q_dim)
     return o @ p["wo"], new_kv

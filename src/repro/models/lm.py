@@ -131,8 +131,9 @@ def kv_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int,
                        long_context: bool = False) -> Params:
+    # per-row index: continuous batching runs each slot at its own position
     return {"kv": kv_cache_spec(cfg, batch, max_len, long_context).specs(),
-            "index": ParamSpec((), jnp.int32, (), init="zeros")}
+            "index": ParamSpec((batch,), jnp.int32, ("batch",), init="zeros")}
 
 
 def _decode_block(x, lp, kv_l, index, cfg):
@@ -213,5 +214,5 @@ def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
                         unroll=cfg.unroll_layers, collect=True)
     x = rmsnorm(x, params["final_norm"])
     logits = logits_last(x[:, -1:], params["embedding"])
-    state = {"kv": kv, "index": jnp.int32(s)}
+    state = {"kv": kv, "index": jnp.full((b,), s, jnp.int32)}
     return logits, state

@@ -403,7 +403,7 @@ def rwkv6_state_specs(cfg: ModelConfig, batch: int) -> Params:
                               ("layers", "batch", None), init="zeros"),
         "prev_ffn": ParamSpec((L, batch, cfg.d_model), jnp.bfloat16,
                               ("layers", "batch", None), init="zeros"),
-        "index": ParamSpec((), jnp.int32, (), init="zeros"),
+        "index": ParamSpec((batch,), jnp.int32, ("batch",), init="zeros"),
     }
 
 
@@ -509,7 +509,7 @@ def zamba2_state_specs(cfg: ModelConfig, batch: int, max_len: int,
                            jnp.bfloat16, ("layers", "batch", seq_ax, None, None),
                            init="zeros"),
         },
-        "index": ParamSpec((), jnp.int32, (), init="zeros"),
+        "index": ParamSpec((batch,), jnp.int32, ("batch",), init="zeros"),
     }
 
 

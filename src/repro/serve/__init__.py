@@ -1,2 +1,4 @@
-"""Batched serving engine (continuous batching, fixed decode slots)."""
-from .engine import EngineStats, Request, ServeEngine
+"""Batched serving engines: continuous per-slot batching (``ServeEngine``)
+plus the legacy wave-scheduled baseline (``WaveServeEngine``)."""
+from .engine import BOS, EngineStats, ServeEngine, WaveServeEngine
+from .scheduler import Request, SlotScheduler

@@ -1,20 +1,35 @@
-"""Batched serving engine: wave-scheduled static batching.
+"""Batched serving engines.
 
-Requests queue up; the scheduler forms waves of up to ``slots`` requests,
-left-pads prompts to a common length with BOS (a *valid* model input — no
-masking surgery needed, so the engine is correct for every family including
-SSM/hybrid states), absorbs the prompt teacher-forced, then decodes greedily
-until every request in the wave completes.
+``ServeEngine`` is the production path: **continuous (per-slot) batching**.
+A ``SlotScheduler`` admits a request into any free decode slot mid-flight;
+its prompt is absorbed in one batched ``api.prefill`` call (SSM/hybrid
+families, whose state is O(1), absorb token-by-token at batch 1) and the
+resulting batch-1 state is scattered into the live batch with
+``api.slot_update`` — no other slot recomputes anything.  Each model step
+then decodes one token for every occupied slot; a finished request's slot is
+refilled on the very next iteration.  Mixed prompt/output lengths therefore
+never head-of-line block: per-request outputs are bit-identical to a
+``slots=1`` reference decode while total model steps drop strictly below the
+wave engine's on mixed workloads.
 
-Continuous (per-slot) batching with per-request cache indices is the
-production extension; the wave engine is the correct, testable core and is
-what the decode_32k dry-run cells lower.
+``WaveServeEngine`` is the legacy wave-scheduled static batcher, kept as the
+benchmark baseline: it forms waves of up to ``slots`` requests, left-pads
+prompts to a common length with BOS and decodes until the *whole wave*
+finishes — the head-of-line blocking the continuous engine removes.
+
+Both engines share ``EngineStats`` telemetry: prefill vs decode model calls,
+per-request TTFT, per-slot occupancy, and honest completion accounting —
+requests cut short by the step budget or ``max_len`` are reported as
+``truncated`` (never ``completed``), and requests still queued when the
+budget runs out are ``unserved``.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Dict, List, Optional
+import time
+from typing import Any, Deque, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +37,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig, ShapeConfig
 from ..models import model_api
+from .scheduler import Request, SlotScheduler
 
 Pytree = Any
 
@@ -29,23 +45,40 @@ BOS = 2
 
 
 @dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: List[int]
-    max_new_tokens: int = 16
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-@dataclasses.dataclass
 class EngineStats:
-    decode_steps: int = 0
-    waves: int = 0
-    completed: int = 0
+    prefill_steps: int = 0           # model calls spent absorbing prompts
+    decode_steps: int = 0            # batched one-token decode calls
+    waves: int = 0                   # wave engine only
+    admitted: int = 0
+    completed: int = 0               # served the full max_new_tokens
+    truncated: int = 0               # cut short by budget or max_len
+    unserved: int = 0                # still queued at run_until_drained return
     tokens_generated: int = 0
+    slot_busy_steps: List[int] = dataclasses.field(default_factory=list)
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def model_steps(self) -> int:
+        """Total model invocations — the cost both engines are compared on."""
+        return self.prefill_steps + self.decode_steps
+
+    def occupancy(self) -> List[float]:
+        """Per-slot fraction of decode steps spent on a live request."""
+        d = max(self.decode_steps, 1)
+        return [b / d for b in self.slot_busy_steps]
+
+    def to_dict(self) -> Dict[str, Any]:
+        out = dataclasses.asdict(self)
+        out["model_steps"] = self.model_steps
+        out["occupancy"] = self.occupancy()
+        out["ttft_mean_s"] = (sum(self.ttft_s) / len(self.ttft_s)
+                              if self.ttft_s else None)
+        return out
 
 
 class ServeEngine:
+    """Continuous-batching engine over a fixed number of decode slots."""
+
     def __init__(self, cfg: ModelConfig, params: Pytree, slots: int = 4,
                  max_len: int = 128):
         self.cfg = cfg
@@ -53,25 +86,196 @@ class ServeEngine:
         self.params = params
         self.slots = slots
         self.max_len = max_len
-        self.queue: List[Request] = []
-        self.stats = EngineStats()
+        self.scheduler = SlotScheduler(slots)
+        self.stats = EngineStats(slot_busy_steps=[0] * slots)
+        self._shape = ShapeConfig("serve", max_len, slots, "decode")
+        self._sub_shape = ShapeConfig("serve", max_len, 1, "decode")
+        self._state = self.api.make_decode_state(self._shape)
+        self._cur = np.full((slots,), BOS, np.int32)   # next token per slot
+        self._step = jax.jit(self.api.decode_step)
+        self._inject = jax.jit(
+            lambda state, slot, sub: self.api.slot_update(
+                self._shape, state, slot, sub))
+        # dense/moe/vlm/encdec absorb the whole prompt in ONE prefill call
+        # (jit recompiles per distinct prompt length); SSM/hybrid state is
+        # O(1) so the prompt is absorbed by decode steps at batch 1.
+        self._has_prefill = cfg.family in ("dense", "moe", "vlm", "encdec")
+        if self._has_prefill:
+            self._prefill = jax.jit(self.api.prefill,
+                                    static_argnames=("max_len",))
+
+    # ---- intake --------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.submit_t = time.monotonic()
+        self.scheduler.submit(req)
+
+    # for callers poking at the backlog (launchers, tests)
+    @property
+    def queue(self):
+        return self.scheduler.pending
+
+    # ---- prompt absorption ---------------------------------------------------
+
+    def _absorb(self, req: Request):
+        """Absorb one request's prompt at batch 1.
+
+        Returns (last-position logits (1, V), batch-1 decode state, model
+        calls spent)."""
+        prompt = req.prompt if req.prompt else [BOS]
+        toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
+        if self._has_prefill:
+            batch: Dict[str, jax.Array] = {"tokens": toks}
+            if self.cfg.family == "encdec":
+                t_enc = self.max_len // self.cfg.enc_frames_ratio
+                batch["frames"] = (
+                    jnp.asarray(req.frames, jnp.bfloat16)
+                    if req.frames is not None else
+                    jnp.zeros((1, t_enc, self.cfg.d_model), jnp.bfloat16))
+            logits, sub = self._prefill(self.params, batch,
+                                        max_len=self.max_len)
+            return logits, sub, 1
+        sub = self.api.make_decode_state(self._sub_shape)
+        logits = None
+        for t in range(toks.shape[1]):
+            logits, sub = self._step(self.params, sub, toks[:, t:t + 1])
+        return logits, sub, toks.shape[1]
+
+    # ---- engine loop ---------------------------------------------------------
+
+    def _emit(self, slot: int, req: Request, tok: int) -> None:
+        req.out_tokens.append(tok)
+        if req.first_token_t is None:
+            req.first_token_t = time.monotonic()
+            if req.submit_t is not None:
+                self.stats.ttft_s.append(req.first_token_t - req.submit_t)
+        self._cur[slot] = tok
+        self.stats.tokens_generated += 1
+
+    def _maybe_finish(self, slot: int, req: Request) -> None:
+        # generating n tokens writes n-1 of them into the cache (positions
+        # plen .. plen+n-2), so n <= max_len - plen keeps a safety margin
+        cap = self.max_len - max(len(req.prompt), 1)
+        if len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+            req.finish_t = time.monotonic()
+            self.stats.completed += 1
+            self.scheduler.evict(slot)
+            self._cur[slot] = BOS          # idle slots are fed BOS
+        elif len(req.out_tokens) >= cap:
+            req.done = req.truncated = True
+            req.finish_t = time.monotonic()
+            self.stats.truncated += 1
+            self.scheduler.evict(slot)
+            self._cur[slot] = BOS
+
+    def _admit(self, budget: int) -> int:
+        """Fill free slots until the queue, the slots, or the budget run out.
+        Absorption is atomic per request, so the budget can overshoot by at
+        most one prompt's absorption cost.  Returns model calls used."""
+        used = 0
+        while used < budget:
+            admissions = self.scheduler.admit()
+            if not admissions:
+                break
+            deferred = []
+            for slot, req in admissions:
+                if used >= budget:
+                    deferred.append((slot, req))
+                    continue
+                if len(req.prompt) >= self.max_len:
+                    # cannot absorb at all: report, never serve garbage
+                    req.done = req.truncated = True
+                    req.finish_t = time.monotonic()
+                    self.stats.truncated += 1
+                    self.scheduler.evict(slot)
+                    continue
+                logits, sub, n = self._absorb(req)
+                used += n
+                self.stats.prefill_steps += n
+                self.stats.admitted += 1
+                self._state = self._inject(self._state, jnp.int32(slot), sub)
+                self._emit(slot, req, int(np.asarray(logits)[0].argmax()))
+                self._maybe_finish(slot, req)   # max_new_tokens == 1
+            if deferred:
+                # out of budget mid-batch: hand the slots back and restore
+                # the requests to the FRONT of the queue in FIFO order
+                for slot, req in reversed(deferred):
+                    self.scheduler.evict(slot)
+                    self.scheduler.pending.appendleft(req)
+                break
+        return used
+
+    def step(self, budget: int = 2 ** 31) -> int:
+        """One engine iteration: admit into free slots, then one batched
+        decode step.  Idle slots are fed BOS and skipped in argmax/token
+        bookkeeping.  Returns model calls used."""
+        used = self._admit(budget)
+        if not self.scheduler.active or used >= budget:
+            return used
+        logits, self._state = self._step(self.params, self._state,
+                                         jnp.asarray(self._cur[:, None]))
+        self.stats.decode_steps += 1
+        used += 1
+        lg = np.asarray(logits)
+        for slot, req in list(self.scheduler.active.items()):
+            self.stats.slot_busy_steps[slot] += 1
+            self._emit(slot, req, int(lg[slot].argmax()))
+            self._maybe_finish(slot, req)
+        return used
+
+    def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
+        budget = max_steps
+        while not self.scheduler.drained() and budget > 0:
+            used = self.step(budget)
+            if used == 0:        # no admissible work fit in the budget
+                break
+            budget -= used
+        # honest accounting on exhaustion: in-flight requests are truncated,
+        # queued ones unserved — neither is "completed"
+        for slot in list(self.scheduler.active):
+            req = self.scheduler.evict(slot)
+            req.done = req.truncated = True
+            req.finish_t = time.monotonic()
+            self.stats.truncated += 1
+        self.stats.unserved = self.scheduler.n_pending
+        return self.stats
+
+
+class WaveServeEngine:
+    """Legacy wave-scheduled static batching (benchmark baseline).
+
+    Forms waves of up to ``slots`` requests, left-pads prompts to a common
+    length with BOS (a *valid* model input — no masking surgery needed, so
+    the engine is correct for every family including SSM/hybrid states),
+    absorbs the prompt teacher-forced, then decodes greedily until every
+    request in the wave completes — the head-of-line blocking that
+    ``ServeEngine`` removes.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Pytree, slots: int = 4,
+                 max_len: int = 128):
+        self.cfg = cfg
+        self.api = model_api(cfg)
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: Deque[Request] = collections.deque()   # O(1) pops
+        self.stats = EngineStats(slot_busy_steps=[0] * slots)
         self._shape = ShapeConfig("serve", max_len, slots, "decode")
         self._step = jax.jit(self.api.decode_step)
 
     def submit(self, req: Request) -> None:
+        req.submit_t = time.monotonic()
         self.queue.append(req)
-
-    def _fresh_state(self) -> Pytree:
-        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                            self.api.decode_state_specs(self._shape),
-                            is_leaf=lambda x: hasattr(x, "struct"))
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
         budget = max_steps
         while self.queue and budget > 0:
-            wave = [self.queue.pop(0) for _ in range(min(self.slots,
-                                                         len(self.queue)))]
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.slots, len(self.queue)))]
             budget -= self._run_wave(wave, budget)
+        self.stats.unserved = len(self.queue)
         return self.stats
 
     def _run_wave(self, wave: List[Request], budget: int) -> int:
@@ -82,28 +286,38 @@ class ServeEngine:
         for i, r in enumerate(wave):
             if r.prompt:
                 toks[i, plen - len(r.prompt):] = r.prompt   # BOS-prefix pad
-        state = self._fresh_state()
+        state = self.api.make_decode_state(self._shape)
         steps = 0
 
-        # absorb prompt (teacher-forced): feed tokens 0..plen-2
+        # absorb prompt (teacher-forced): feed all plen prompt positions; the
+        # logits from the last feed predict each request's first new token
         logits = None
         for t in range(plen):
             logits, state = self._step(self.params, state,
                                        jnp.asarray(toks[:, t:t + 1]))
-            self.stats.decode_steps += 1
+            self.stats.prefill_steps += 1
             steps += 1
 
-        # decode
-        cur = np.array([int(np.argmax(np.asarray(logits)[i]))
-                        for i in range(self.slots)], np.int32)
+        cur = np.full((self.slots,), BOS, np.int32)
+        lg = np.asarray(logits)
+        for i in range(n):                     # idle rows skip argmax
+            cur[i] = lg[i].argmax()
         max_new = max(r.max_new_tokens for r in wave)
-        for _ in range(min(max_new, self.max_len - plen - 1, budget - steps)):
+        self.stats.admitted += n
+        for _ in range(min(max_new, self.max_len - plen - 1,
+                           max(budget - steps, 0))):
             for i, r in enumerate(wave):
                 if not r.done:
                     r.out_tokens.append(int(cur[i]))
+                    if r.first_token_t is None:
+                        r.first_token_t = time.monotonic()
+                        if r.submit_t is not None:
+                            self.stats.ttft_s.append(
+                                r.first_token_t - r.submit_t)
                     self.stats.tokens_generated += 1
                     if len(r.out_tokens) >= r.max_new_tokens:
                         r.done = True
+                        r.finish_t = time.monotonic()
                         self.stats.completed += 1
             if all(r.done for r in wave):
                 break
@@ -111,9 +325,17 @@ class ServeEngine:
                                        jnp.asarray(cur[:, None]))
             self.stats.decode_steps += 1
             steps += 1
-            cur = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+            for i, r in enumerate(wave):
+                if not r.done:
+                    self.stats.slot_busy_steps[i] += 1
+            lg = np.asarray(logits)
+            for i in range(n):                 # idle rows skip argmax
+                cur[i] = lg[i].argmax()
         for r in wave:
             if not r.done:
-                r.done = True
-                self.stats.completed += 1
+                # ran out of budget or cache length: this request did NOT
+                # receive its max_new_tokens — report it truncated
+                r.done = r.truncated = True
+                r.finish_t = time.monotonic()
+                self.stats.truncated += 1
         return steps

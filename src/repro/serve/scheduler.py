@@ -1,0 +1,85 @@
+"""Slot scheduler for continuous batching.
+
+Pure-python admission/eviction bookkeeping, kept model-free so the policy is
+unit-testable without touching jax: a fixed number of decode slots, a FIFO
+pending queue, and a slot -> request map.  The engine asks ``admit()`` for
+newly filled slots each iteration and ``evict()``s a slot the moment its
+request finishes — a new request then rides the very next decode step while
+the other slots keep decoding (no head-of-line blocking).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    frames: Optional[Any] = None     # encdec only: (1, t_enc, d) frame embeds
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    truncated: bool = False          # cut short (budget / max_len), NOT completed
+    # telemetry (wall-clock, filled in by the engine)
+    submit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.submit_t is None or self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+
+class SlotScheduler:
+    """FIFO admission of requests into a fixed set of decode slots."""
+
+    def __init__(self, slots: int):
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.slots = slots
+        self.pending: Deque[Request] = collections.deque()
+        self.active: Dict[int, Request] = {}
+
+    # ---- queue side ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self.pending)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    def drained(self) -> bool:
+        return not self.pending and not self.active
+
+    # ---- slot side -----------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.slots) if i not in self.active]
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Fill free slots from the pending queue (FIFO); returns the new
+        (slot, request) assignments."""
+        out: List[Tuple[int, Request]] = []
+        for slot in self.free_slots():
+            if not self.pending:
+                break
+            req = self.pending.popleft()
+            self.active[slot] = req
+            out.append((slot, req))
+        return out
+
+    def evict(self, slot: int) -> Request:
+        if slot not in self.active:
+            raise KeyError(f"slot {slot} is not active")
+        return self.active.pop(slot)

@@ -61,7 +61,8 @@ def test_decode_step_smoke(arch):
     assert jnp.isfinite(logits).all()
     logits2, state2 = step(params, state, jnp.full((2, 1), 7, jnp.int32))
     assert jnp.isfinite(logits2).all()
-    assert int(state2["index"]) == 2
+    assert state2["index"].shape == (2,)          # per-row (slot) positions
+    assert (state2["index"] == 2).all()
     assert not jnp.allclose(logits, logits2)      # cache actually advanced
 
 
@@ -78,7 +79,8 @@ def test_prefill_smoke(arch):
     assert logits.shape == (2, cfg.padded_vocab)
     assert jnp.isfinite(logits).all()
     expect = 16 + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
-    assert int(state["index"]) == expect
+    assert state["index"].shape == (2,)           # per-row (slot) positions
+    assert (state["index"] == expect).all()
     # continue decoding from the prefilled state
     lg, state = jax.jit(api.decode_step)(params, state,
                                          jnp.full((2, 1), 5, jnp.int32))

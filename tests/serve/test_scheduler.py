@@ -1,0 +1,63 @@
+"""SlotScheduler admission/eviction invariants (pure python, no model)."""
+
+import pytest
+
+from repro.serve import Request, SlotScheduler
+
+
+def _req(uid):
+    return Request(uid=uid, prompt=[3, 4], max_new_tokens=4)
+
+
+def test_fifo_admission_fills_free_slots():
+    s = SlotScheduler(2)
+    for uid in range(5):
+        s.submit(_req(uid))
+    admissions = s.admit()
+    assert [slot for slot, _ in admissions] == [0, 1]
+    assert [r.uid for _, r in admissions] == [0, 1]       # FIFO order
+    assert s.n_active == 2 and s.n_pending == 3
+    assert s.admit() == []                                # no free slot left
+
+
+def test_evict_frees_slot_for_next_request():
+    s = SlotScheduler(2)
+    for uid in range(3):
+        s.submit(_req(uid))
+    s.admit()
+    done = s.evict(0)
+    assert done.uid == 0
+    assert s.free_slots() == [0]
+    admissions = s.admit()
+    assert admissions[0][0] == 0 and admissions[0][1].uid == 2
+    assert s.n_pending == 0
+
+
+def test_no_double_occupancy_and_slot_identity():
+    s = SlotScheduler(3)
+    for uid in range(3):
+        s.submit(_req(uid))
+    slots = [slot for slot, _ in s.admit()]
+    assert sorted(slots) == [0, 1, 2]
+    assert len(set(slots)) == 3
+    with pytest.raises(KeyError):
+        s.evict(7)                                        # never admitted
+    s.evict(1)
+    with pytest.raises(KeyError):
+        s.evict(1)                                        # already evicted
+
+
+def test_drained_reflects_both_queue_and_slots():
+    s = SlotScheduler(1)
+    assert s.drained()
+    s.submit(_req(0))
+    assert not s.drained()
+    s.admit()
+    assert not s.drained()
+    s.evict(0)
+    assert s.drained()
+
+
+def test_zero_slots_rejected():
+    with pytest.raises(ValueError):
+        SlotScheduler(0)

@@ -287,9 +287,9 @@ def test_serve_engine_drains_queue():
                            max_new_tokens=4))
     stats = eng.run_until_drained()
     assert stats.completed == 5
-    assert stats.waves == 3                          # 2 + 2 + 1
+    assert stats.truncated == 0 and stats.unserved == 0
     assert stats.tokens_generated == 20
-    assert all(len(t) == 0 for t in [eng.queue])
+    assert len(eng.queue) == 0 and eng.scheduler.drained()
 
 
 def test_serve_engine_ssm_family():
