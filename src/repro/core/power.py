@@ -17,6 +17,7 @@ paper side by side and flag |delta|.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -65,13 +66,50 @@ PAPER_TABLE2: List[Table2Row] = [
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=None)
 def fit_power_exponent(tech: str) -> float:
     """Least-squares fit of k in P ~ V^k over the tech's Table II rows.
 
     Each row with equal-size partitions at voltages v_i and baseline V_ref
     predicts reduction r(k) = 1 - mean_i (v_i / V_ref)^k ; we minimise
     sum (r(k) - r_paper)^2 by golden-section search on k in [0.05, 4].
+
+    The fit is cached per tech — ``PAPER_TABLE2`` is a constant, so the
+    exponent is too.  Previously this re-ran ~2.5k interpreted ``loss``
+    evaluations on every ``PowerStage`` execution of a sweep.  The loss body
+    is kept operation-for-operation identical to
+    :func:`fit_power_exponent_ref` so both produce the same bits (Python
+    ``**`` and NumPy power round differently in the last ulp, which the
+    golden-section bracketing would amplify into a different exponent).
     """
+    rows = [r for r in PAPER_TABLE2 if r.tech == tech]
+    if not rows:
+        raise ValueError(f"no Table II rows for {tech}")
+
+    def loss(k: float) -> float:
+        tot = 0.0
+        for r in rows:
+            pred = 1.0 - np.mean([(v / r.baseline_v) ** k for v in r.partition_v])
+            tot += (pred - r.reduction_pct / 100.0) ** 2
+        return tot
+
+    lo, hi = 0.05, 4.0
+    phi = (np.sqrt(5.0) - 1.0) / 2.0
+    a, b = lo, hi
+    c, d = b - phi * (b - a), a + phi * (b - a)
+    for _ in range(80):
+        if loss(c) < loss(d):
+            b = d
+        else:
+            a = c
+        c, d = b - phi * (b - a), a + phi * (b - a)
+    return 0.5 * (a + b)
+
+
+def fit_power_exponent_ref(tech: str) -> float:
+    """The original per-row interpreted fit, uncached — bit-identical result
+    to :func:`fit_power_exponent`; kept as the ``impl="reference"`` perf
+    baseline (the seed paid ~2.5k Python ``loss`` evaluations per sweep)."""
     rows = [r for r in PAPER_TABLE2 if r.tech == tech]
     if not rows:
         raise ValueError(f"no Table II rows for {tech}")

@@ -44,6 +44,10 @@ class TechNode:
     p16_mw: float
 
 
+#: Cross-instance cache of synthesized timing structure (see
+#: ``TimingModel.__post_init__``); bounded, cleared wholesale when full.
+_SYNTH_CACHE: Dict[tuple, tuple] = {}
+
 TECH_NODES: Dict[str, TechNode] = {
     # Guard-band experiments use [0.95, 1.00] V exactly as the paper's Artix-7 run.
     "vivado-28nm": TechNode("vivado-28nm", v_nom=1.00, v_th=0.40, v_min=1.00,
@@ -122,6 +126,23 @@ class TimingModel:
     uncertainty_ns: float = 0.25    # clock uncertainty subtracted from slack
 
     def __post_init__(self) -> None:
+        # The synthesized structure depends only on geometry, seed and the
+        # calibration constants — NOT on the tech node or clock (those only
+        # scale delays later).  Cache it so a sweep's 4 tech nodes share one
+        # synthesis, and repeated models (tests, benchmarks) are free.
+        key = (self.n, self.n_bits, self.seed, self.base_logic_ns,
+               self.carry_ns, self.row_band_ns, self.row_slope_ns,
+               self.base_net_ns, self.net_spread_ns, self.jitter_ns)
+        hit = _SYNTH_CACHE.get(key)
+        if hit is None:
+            hit = self._synthesize()
+            if len(_SYNTH_CACHE) >= 32:
+                _SYNTH_CACHE.clear()
+            _SYNTH_CACHE[key] = hit
+        self._logic, self._net, self._fanout, self._levels, self._mac_delay \
+            = hit
+
+    def _synthesize(self):
         rng = np.random.default_rng(self.seed)
         n, b = self.n, self.n_bits
         bits = np.arange(b, dtype=np.float64)
@@ -142,10 +163,15 @@ class TimingModel:
             + self.net_spread_ns * rng.random(size=(n, n, b))
             + 0.02 * band[:, None, None]
         )
-        self._logic = np.maximum(logic, 0.1)      # (n, n, bits)
-        self._net = np.maximum(net, 0.05)
-        self._fanout = rng.integers(4, 12, size=(n, n))
-        self._levels = 7 + (bits[None, None, :] // 6).astype(np.int64) + np.zeros((n, n, b), np.int64)
+        logic = np.maximum(logic, 0.1)            # (n, n, bits)
+        net = np.maximum(net, 0.05)
+        fanout = rng.integers(4, 12, size=(n, n))
+        levels = 7 + (bits[None, None, :] // 6).astype(np.int64) \
+            + np.zeros((n, n, b), np.int64)
+        mac_delay = (logic + net).max(axis=-1)
+        for arr in (logic, net, fanout, levels, mac_delay):
+            arr.flags.writeable = False           # cached arrays are shared
+        return logic, net, fanout, levels, mac_delay
 
     # -- nominal-voltage quantities ------------------------------------------------
 
@@ -156,8 +182,9 @@ class TimingModel:
 
     @property
     def mac_delay_ns(self) -> np.ndarray:
-        """(n, n) worst-path delay per MAC."""
-        return self.path_delays_ns.max(axis=-1)
+        """(n, n) worst-path delay per MAC (precomputed — it is the base of
+        every per-trial voltage scaling)."""
+        return self._mac_delay
 
     @property
     def min_slack_ns(self) -> np.ndarray:
@@ -202,28 +229,35 @@ class TimingModel:
     # -- report rendering ------------------------------------------------------------
 
     def report(self, worst: int = 100) -> List[TimingPath]:
-        """The ``worst`` setup paths, formatted like the paper's Table I."""
+        """The ``worst`` setup paths, formatted like the paper's Table I.
+
+        All numeric columns (indices, slacks, rounded delays) are produced as
+        whole arrays; only the final dataclass packing walks the rows.
+        """
         d = self.path_delays_ns
         flat = d.reshape(-1)
         order = np.argsort(-flat)[:worst]
         n, b = self.n, self.n_bits
-        out: List[TimingPath] = []
-        for rank, ix in enumerate(order):
-            i, j, bit = np.unravel_index(ix, (n, n, b))
-            total = float(flat[ix])
-            out.append(TimingPath(
-                name=f"Path {rank + 1}",
-                slack_ns=round(self.clock_ns - self.uncertainty_ns - total, 2),
-                levels=int(self._levels[i, j, bit]),
-                high_fanout=int(self._fanout[i, j]),
-                path_from=f"GEN_REG_I[{max(i - 1, 0)}].GEN_REG_J[{j}].uut/prev_activ_reg[1]/C",
-                path_to=f"GEN_REG_I[{i}].GEN_REG_J[{j}].uut/sig_mac_out_reg[{bit}]/D",
-                total_delay_ns=round(total, 2),
-                logic_delay_ns=round(float(self._logic[i, j, bit]), 2),
-                net_delay_ns=round(float(self._net[i, j, bit]), 2),
-                requirement_ns=self.clock_ns,
-            ))
-        return out
+        i_s, j_s, bits = np.unravel_index(order, (n, n, b))
+        totals = flat[order]
+        slacks = self.clock_ns - self.uncertainty_ns - totals
+        levels = self._levels[i_s, j_s, bits]
+        fanout = self._fanout[i_s, j_s]
+        logic = self._logic[i_s, j_s, bits]
+        net = self._net[i_s, j_s, bits]
+        return [TimingPath(
+            name=f"Path {rank + 1}",
+            slack_ns=round(float(slacks[rank]), 2),
+            levels=int(levels[rank]),
+            high_fanout=int(fanout[rank]),
+            path_from=f"GEN_REG_I[{max(i - 1, 0)}].GEN_REG_J[{j}].uut/prev_activ_reg[1]/C",
+            path_to=f"GEN_REG_I[{i}].GEN_REG_J[{j}].uut/sig_mac_out_reg[{bit}]/D",
+            total_delay_ns=round(float(totals[rank]), 2),
+            logic_delay_ns=round(float(logic[rank]), 2),
+            net_delay_ns=round(float(net[rank]), 2),
+            requirement_ns=self.clock_ns,
+        ) for rank, (i, j, bit) in enumerate(zip(i_s.tolist(), j_s.tolist(),
+                                                 bits.tolist()))]
 
     def implementation_report(self, worst: int = 100, *, partitioned: bool = True,
                               seed: int = 7) -> np.ndarray:

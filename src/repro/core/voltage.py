@@ -99,15 +99,22 @@ class RuntimeScheme:
 
     def partition_flags(self, mac_flags: np.ndarray,
                         partition_of_mac: np.ndarray) -> np.ndarray:
-        """Reduce per-MAC Razor flags to per-partition timing_fail flags."""
-        n_part = int(partition_of_mac.max()) + 1
-        flags = np.zeros(n_part, dtype=bool)
-        for p in range(n_part):
-            sel = mac_flags[partition_of_mac == p]
-            if sel.size == 0:
-                continue
-            flags[p] = sel.any() if self.flag_reduce == "or" else sel.all()
-        return flags
+        """Reduce per-MAC Razor flags to per-partition timing_fail flags.
+
+        One ``np.bincount`` pass instead of a per-partition mask scan; empty
+        partitions reduce to False under both semantics.  Flags are
+        binarized first so integer inputs (e.g. per-MAC detected *counts*)
+        keep the original truthiness semantics of ``any()``/``all()``.
+        """
+        part = np.asarray(partition_of_mac)
+        n_part = int(part.max()) + 1
+        truthy = np.asarray(mac_flags).astype(bool)
+        hits = np.bincount(part, weights=truthy.astype(np.float64),
+                           minlength=n_part)
+        if self.flag_reduce == "or":
+            return hits > 0
+        size = np.bincount(part, minlength=n_part)
+        return (size > 0) & (hits == size)
 
     def step(self, v: np.ndarray, fail_flags: np.ndarray) -> np.ndarray:
         """One Algorithm-2 update: +V_s on failure else -V_s, clamped."""
@@ -146,6 +153,37 @@ class RuntimeScheme:
             v = self.step(v, flags)
         converged = ~np.isnan(last_clean)
         out = np.where(np.isnan(last_clean), self.v_ceil, last_clean)
+        return CalibrationResult.wrap(out, converged)
+
+    def calibrate_bisect(self, v0: np.ndarray,
+                         trial: Callable[[np.ndarray], np.ndarray],
+                         max_trials: int = 16,
+                         tol: float = 1e-3) -> CalibrationResult:
+        """Batched bisection alternative to the Algorithm-2 anneal.
+
+        The whole rail vector converges in one loop: every trial evaluates all
+        partitions at once, each partition halving its own [failing, clean]
+        bracket.  ~log2(range/tol) trials instead of the anneal's walk — use
+        it when only the converged rails matter, not the paper-faithful
+        oscillation trajectory.  Partitions that fail even at ``v_ceil`` are
+        reported unconverged and pinned there, like :meth:`calibrate`.
+        ``v0`` only fixes the rail count (the bracket is [v_floor, v_ceil]).
+        """
+        p = len(np.asarray(v0, dtype=np.float64))
+        if max_trials <= 0:                    # no trial budget: like anneal,
+            return CalibrationResult.wrap(     # pin at ceil, unconverged
+                np.full(p, self.v_ceil), np.zeros(p, dtype=bool))
+        lo = np.full(p, self.v_floor)
+        hi = np.full(p, self.v_ceil)
+        converged = ~trial(hi.copy())          # clean at the ceiling?
+        for _ in range(max(max_trials - 1, 0)):
+            if float(np.max(hi - lo)) <= tol:
+                break
+            mid = 0.5 * (lo + hi)
+            flags = trial(mid)
+            lo = np.where(flags, mid, lo)
+            hi = np.where(flags, hi, mid)
+        out = np.where(converged, hi, self.v_ceil)
         return CalibrationResult.wrap(out, converged)
 
 

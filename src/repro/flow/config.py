@@ -56,6 +56,15 @@ class FlowConfig:
     flag_reduce: str = "or"              # Razor per-partition flag reduction
     activity: float = 0.5                # power-model toggle rate
     algo_params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    # Hot-path implementation: "vectorized" (default) uses the array-programming
+    # clustering + simulator; "reference" runs the bit-exact loop oracles
+    # (clustering_ref / SystolicSim reference propagation) — the perf baseline
+    # of benchmarks/run.py's ``flow`` scenario.
+    impl: str = "vectorized"
+    # Razor calibration: "anneal" = the paper's Algorithm-2 trial-run walk;
+    # "bisect" = batched per-partition bisection (fewer trials, same rails up
+    # to the step/tolerance difference)
+    calibration_method: str = "anneal"
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "algo",
@@ -86,6 +95,10 @@ class FlowConfig:
             raise ValueError("max_trials must be >= 0")
         if self.flag_reduce not in ("or", "and"):
             raise ValueError("flag_reduce must be 'or' or 'and'")
+        if self.impl not in ("vectorized", "reference"):
+            raise ValueError("impl must be 'vectorized' or 'reference'")
+        if self.calibration_method not in ("anneal", "bisect"):
+            raise ValueError("calibration_method must be 'anneal' or 'bisect'")
         if not 0.0 < self.activity <= 1.0:
             raise ValueError("activity must be in (0, 1]")
         if self.resolved_v_min() <= self.resolved_v_crash():

@@ -13,17 +13,46 @@ from __future__ import annotations
 
 from typing import Any, Iterable, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .artifacts import Artifacts, ArtifactStore
 from .config import FlowConfig
 from .stages import Stage, default_stages
 
 
-class Pipeline:
-    """An ordered, editable chain of flow stages."""
+def _content_digest(value: Any) -> Any:
+    """Hashable, value-exact digest of a stage input artifact.
 
-    def __init__(self, stages: Optional[Sequence[Stage]] = None):
+    Arrays key on their raw bytes (exact — no hash collisions to reason
+    about; the flow's cacheable inputs are small slack/label vectors).
+    Returns ``None`` for values that cannot be digested, which disables
+    content keying for that stage run.
+    """
+    if isinstance(value, np.ndarray):
+        return (value.dtype.str, value.shape, value.tobytes())
+    if isinstance(value, (int, float, str, bool, bytes, type(None))):
+        return (type(value).__name__, value)
+    return None
+
+
+class Pipeline:
+    """An ordered, editable chain of flow stages.
+
+    ``content_cache`` (default on) lets stages that declare
+    ``content_cache = True`` key their cached output on the *values* of their
+    required artifacts instead of the accumulated upstream config
+    fingerprint.  The cluster stage is the motivating case: min-slack vectors
+    are identical across technology nodes (the synthesized timing structure
+    is tech-independent), so one clustering per algorithm serves every tech
+    of a sweep.  Pass ``content_cache=False`` to reproduce the purely
+    prefix-keyed behaviour (the perf baseline of the ``flow`` benchmark).
+    """
+
+    def __init__(self, stages: Optional[Sequence[Stage]] = None, *,
+                 content_cache: bool = True):
         self.stages: List[Stage] = list(default_stages() if stages is None
                                         else stages)
+        self.content_cache = content_cache
         names = [s.name for s in self.stages]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate stage names: {names}")
@@ -41,24 +70,25 @@ class Pipeline:
         """New pipeline with the named stage swapped for ``stage``."""
         out = list(self.stages)
         out[self._index(name)] = stage
-        return Pipeline(out)
+        return Pipeline(out, content_cache=self.content_cache)
 
     def without(self, *names: str) -> "Pipeline":
         """New pipeline with the named stage(s) removed (skipped)."""
         drop = set(names)
         for n in drop:
             self._index(n)                      # raise on unknown names
-        return Pipeline([s for s in self.stages if s.name not in drop])
+        return Pipeline([s for s in self.stages if s.name not in drop],
+                        content_cache=self.content_cache)
 
     def insert_after(self, name: str, stage: Stage) -> "Pipeline":
         out = list(self.stages)
         out.insert(self._index(name) + 1, stage)
-        return Pipeline(out)
+        return Pipeline(out, content_cache=self.content_cache)
 
     def insert_before(self, name: str, stage: Stage) -> "Pipeline":
         out = list(self.stages)
         out.insert(self._index(name), stage)
-        return Pipeline(out)
+        return Pipeline(out, content_cache=self.content_cache)
 
     def __repr__(self) -> str:
         return f"Pipeline({[s.name for s in self.stages]})"
@@ -112,7 +142,7 @@ class Pipeline:
                                                 + tuple(stage.config_keys)))
             chain = chain + (stage.cache_token(),)
             if use_store:
-                key = (stage.name, (chain, cfg.fingerprint(upstream_keys)))
+                key = self._store_key(stage, art, cfg, chain, upstream_keys)
                 delta = store.get(key)
                 if delta is None:
                     new = stage.run(art, cfg)
@@ -122,6 +152,28 @@ class Pipeline:
             else:
                 art = stage.run(art, cfg)
         return art
+
+    def _store_key(self, stage: Stage, art: Artifacts, cfg: FlowConfig,
+                   chain: Tuple[str, ...], upstream_keys: Tuple[str, ...]):
+        """Cache key for one stage execution.
+
+        Default: prefix keying — the upstream implementation chain plus the
+        fingerprint of every config field any stage so far depends on.
+        Content keying (stage.content_cache, pipeline content_cache on, and
+        all required artifacts digestible): the stage's own implementation +
+        config fields + the exact *values* of its inputs, so runs reaching
+        identical inputs through different upstream configs share work.
+        """
+        if self.content_cache and getattr(stage, "content_cache", False):
+            digests = tuple(_content_digest(art[r]) for r in stage.requires
+                            if r in art)
+            if len(digests) == len(stage.requires) and \
+                    all(d is not None for d in digests):
+                return (stage.name,
+                        ("content", stage.cache_token(),
+                         cfg.fingerprint(tuple(stage.config_keys)),
+                         tuple(zip(stage.requires, digests))))
+        return (stage.name, (chain, cfg.fingerprint(upstream_keys)))
 
 
 def execute(cfg: Optional[FlowConfig] = None, *,

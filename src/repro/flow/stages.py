@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, Optional, Tuple, Type
 import numpy as np
 
 from ..core import clustering as cl
+from ..core import clustering_ref as cl_ref
 from ..core.constraints import generate_sdc, generate_xdc
 from ..core.partition import grid_floorplan, partition_min_slack
 from ..core.power import model_for
@@ -42,6 +43,11 @@ class Stage:
     requires: Tuple[str, ...] = ()
     provides: Tuple[str, ...] = ()
     config_keys: Tuple[str, ...] = ()
+    # opt-in: cache this stage's output on the *values* of its required
+    # artifacts (+ its own config fields) instead of the upstream config
+    # prefix — sound exactly because of the requires/config_keys contract
+    # above.  See Pipeline._store_key.
+    content_cache: bool = False
 
     def run(self, art: Artifacts, cfg: FlowConfig) -> Artifacts:
         raise NotImplementedError
@@ -129,35 +135,40 @@ class TimingStage(Stage):
 
 
 def cluster_slack(slack: np.ndarray, algo: str, n_clusters: Optional[int],
-                  seed: int, params: Optional[Dict[str, Any]] = None) -> np.ndarray:
+                  seed: int, params: Optional[Dict[str, Any]] = None,
+                  impl: str = "vectorized") -> np.ndarray:
     """Run the chosen algorithm with paper-consistent defaults and fold noise.
 
     ``params`` overrides the defaults (bandwidth / eps / min_pts / linkage /
     k).  Labels are relabelled so cluster 0 has the highest slack.
+    ``impl`` selects the vectorized implementations (default) or the loop
+    oracles in :mod:`repro.core.clustering_ref` — bit-identical labels,
+    orders of magnitude apart in wall clock.
     """
+    mod = cl if impl == "vectorized" else cl_ref
     algo = algo.lower()
     params = dict(params or {})
     spread = float(slack.max() - slack.min()) or 1.0
     if algo in ("kmeans", "k-means"):
-        labels = cl.kmeans(slack, k=params.pop("k", n_clusters or 4),
-                           seed=params.pop("seed", seed), **params)
+        labels = mod.kmeans(slack, k=params.pop("k", n_clusters or 4),
+                            seed=params.pop("seed", seed), **params)
     elif algo in ("hierarchical", "hierarchy"):
-        labels = cl.hierarchical(slack, n_clusters=params.pop("k", n_clusters or 4),
-                                 **params)
+        labels = mod.hierarchical(slack, n_clusters=params.pop("k", n_clusters or 4),
+                                  **params)
     elif algo in ("meanshift", "mean-shift"):
         # the paper's radius 0.4 on its ~2.4 ns 16x16 slack spread, rescaled
-        labels = cl.meanshift(slack,
-                              bandwidth=params.pop("bandwidth", 0.17 * spread),
-                              **params)
+        labels = mod.meanshift(slack,
+                               bandwidth=params.pop("bandwidth", 0.17 * spread),
+                               **params)
     elif algo == "dbscan":
-        labels = cl.dbscan(slack, eps=params.pop("eps", spread / 12.0),
-                           min_pts=params.pop("min_pts",
-                                              max(4, len(slack) // 64)),
-                           **params)
-        labels = cl.attach_noise_to_nearest(slack, labels)
+        labels = mod.dbscan(slack, eps=params.pop("eps", spread / 12.0),
+                            min_pts=params.pop("min_pts",
+                                               max(4, len(slack) // 64)),
+                            **params)
+        labels = mod.attach_noise_to_nearest(slack, labels)
     else:
         raise ValueError(f"unknown algorithm {algo!r}")
-    return cl.relabel_by_feature_mean(slack, labels)   # 0 = highest slack
+    return mod.relabel_by_feature_mean(slack, labels)   # 0 = highest slack
 
 
 @register_stage
@@ -171,11 +182,14 @@ class ClusterStage(Stage):
     name = "cluster"
     requires = ("slack",)
     provides = ("labels", "n_partitions", "n_partitions_requested")
-    config_keys = ("algo", "n_clusters", "seed", "algo_params")
+    config_keys = ("algo", "n_clusters", "seed", "algo_params", "impl")
+    # the synthesized slack structure is tech-independent, so content keying
+    # shares one clustering per algorithm across every tech node of a sweep
+    content_cache = True
 
     def run(self, art: Artifacts, cfg: FlowConfig) -> Artifacts:
         labels = cluster_slack(art.slack, cfg.algo, cfg.n_clusters, cfg.seed,
-                               dict(cfg.algo_params))
+                               dict(cfg.algo_params), impl=cfg.impl)
         return art.with_(labels=labels,
                          n_partitions=int(labels.max()) + 1,
                          n_partitions_requested=cfg.n_clusters)
@@ -189,6 +203,7 @@ class FloorplanStage(Stage):
     requires = ("labels",)
     provides = ("floorplan",)
     config_keys = ("array_n",)
+    content_cache = True                 # same labels -> same floorplan
 
     def run(self, art: Artifacts, cfg: FlowConfig) -> Artifacts:
         return art.with_(floorplan=grid_floorplan(art.labels, cfg.array_n))
@@ -230,13 +245,13 @@ class RuntimeCalibrationStage(Stage):
                 "calibration_converged", "floorplan_runtime")
     config_keys = ("tech", "v_min", "v_crash", "clock_ns", "seed",
                    "calibration_seed", "calibrate", "max_trials",
-                   "flag_reduce")
+                   "flag_reduce", "impl", "calibration_method")
 
     def run(self, art: Artifacts, cfg: FlowConfig) -> Artifacts:
         v_min, v_crash = cfg.resolved_v_min(), cfg.resolved_v_crash()
         cal_seed = cfg.resolved_calibration_seed()
         sim = SystolicSim(art.timing_model, art.floorplan_static,
-                          RazorConfig(clock_ns=cfg.clock_ns))
+                          RazorConfig(clock_ns=cfg.clock_ns), impl=cfg.impl)
         static_v = art.static_v
         runtime_v = static_v.copy()
         converged = np.ones(art.n_partitions, dtype=bool)
@@ -253,8 +268,12 @@ class RuntimeCalibrationStage(Stage):
                 trials += 1
                 return sim.trial_run(v, seed=cal_seed + trials)
 
-            result = scheme.calibrate(static_v, trial,
-                                      max_trials=cfg.max_trials)
+            if cfg.calibration_method == "bisect":
+                result = scheme.calibrate_bisect(static_v, trial,
+                                                 max_trials=cfg.max_trials)
+            else:
+                result = scheme.calibrate(static_v, trial,
+                                          max_trials=cfg.max_trials)
             runtime_v = np.asarray(result)
             converged = result.converged
             fail_free = not sim.trial_run(runtime_v,
@@ -276,10 +295,17 @@ class PowerStage(Stage):
     requires = ("labels", "n_partitions", "static_v")
     provides = ("baseline_mw", "static_mw", "runtime_mw",
                 "static_reduction_pct", "runtime_reduction_pct")
-    config_keys = ("array_n", "tech", "freq_mhz", "activity")
+    config_keys = ("array_n", "tech", "freq_mhz", "activity", "impl")
 
     def run(self, art: Artifacts, cfg: FlowConfig) -> Artifacts:
-        pm = model_for(cfg.tech, freq_mhz=cfg.freq_mhz, activity=cfg.activity)
+        if cfg.impl == "reference":
+            # seed-faithful baseline: per-run interpreted exponent fit
+            from ..core.power import fit_power_exponent_ref
+            pm = model_for(cfg.tech, k=fit_power_exponent_ref(cfg.tech),
+                           freq_mhz=cfg.freq_mhz, activity=cfg.activity)
+        else:
+            pm = model_for(cfg.tech, freq_mhz=cfg.freq_mhz,
+                           activity=cfg.activity)
         runtime_v = art.get("runtime_v", art.static_v)
         frac = np.bincount(art.labels, minlength=art.n_partitions) / art.labels.size
         baseline = pm.baseline_mw(cfg.array_n, cfg.node.v_nom)

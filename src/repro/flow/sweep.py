@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Union
 
 from .artifacts import ArtifactStore
@@ -52,6 +53,13 @@ class SweepResult:
     configs: List[FlowConfig]
     reports: List[FlowReport]
     store: ArtifactStore
+    # wall-clock seconds per config, in ``configs`` order (cache hits show up
+    # as near-zero entries) — the raw data behind benchmarks' BENCH_flow.json
+    elapsed_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_elapsed_s(self) -> float:
+        return float(sum(self.elapsed_s))
 
     def rows(self) -> List[Dict[str, Any]]:
         """Tidy comparison rows, one per config (stable column set)."""
@@ -109,10 +117,14 @@ def sweep(grid: Union[Mapping[str, Sequence[Any]], Iterable[FlowConfig]],
     pipeline = pipeline or Pipeline()
     store = store or ArtifactStore()
     reports = []
+    elapsed: List[float] = []
     for cfg in configs:
+        t0 = time.perf_counter()
         art = pipeline.run(cfg, store=store)
         reports.append(report_from(art, cfg))
-    return SweepResult(configs=configs, reports=reports, store=store)
+        elapsed.append(time.perf_counter() - t0)
+    return SweepResult(configs=configs, reports=reports, store=store,
+                       elapsed_s=elapsed)
 
 
 def _fmt(v: Any) -> str:

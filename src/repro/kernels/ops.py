@@ -22,35 +22,33 @@ from .precision_island import precision_island
 from .razor_matmul import razor_matmul
 from .ssd_chunk import ssd_chunk
 from .systolic_mac import systolic_mac
+from .tuning import default_interpret as _default_interpret
+from .tuning import select_blocks, select_chunk
 from .wkv6 import wkv6
 
-
-def _default_interpret() -> bool:
-    return jax.default_backend() == "cpu"
+# Every kernel now resolves ``interpret=None`` through
+# ``tuning.default_interpret`` itself (compiled off-CPU, interpreted on CPU)
+# and picks block/chunk sizes from the tuning tables, so these wrappers are
+# plain aliases kept for the established ``ops.*`` call sites.
 
 
 def systolic_matmul(a, b, v_map, v_safe, **kw):
-    kw.setdefault("interpret", _default_interpret())
     return systolic_mac(a, b, v_map, v_safe, **kw)
 
 
 def razor_mm(a, b, tol: float = 0.05, **kw):
-    kw.setdefault("interpret", _default_interpret())
     return razor_matmul(a, b, tol=tol, **kw)
 
 
 def precision_mm(a, b, tiers, **kw):
-    kw.setdefault("interpret", _default_interpret())
     return precision_island(a, b, tiers, **kw)
 
 
 def wkv6_op(r, k, v, w_log, u, state, chunk: int = 64, **kw):
-    kw.setdefault("interpret", _default_interpret())
     return wkv6(r, k, v, w_log, u, state, chunk=chunk, **kw)
 
 
 def ssd_op(x, dt, A_log, B, C, D, state, chunk: int = 64, **kw):
-    kw.setdefault("interpret", _default_interpret())
     return ssd_chunk(x, dt, A_log, B, C, D, state, chunk=chunk, **kw)
 
 
@@ -98,19 +96,23 @@ def voltage_scaled_matmul(a: jax.Array, b: jax.Array, *, block: int = 128,
     frac = (h_tile - lo) / max(hi - lo, 1e-9)
     v_safe = v_crash + (1 - frac) * (v_min - v_crash) * 0.9
 
-    c, flags = systolic_mac(a, b, jnp.asarray(v_map), jnp.asarray(v_safe),
-                            block_m=block, block_n=block,
-                            block_k=min(block, k), interpret=interpret)
+    c, flags, n_fired = systolic_mac(
+        a, b, jnp.asarray(v_map), jnp.asarray(v_safe), block_m=block,
+        block_n=block, block_k=min(block, k), interpret=interpret,
+        count_flags=True)
     # Algorithm 2: bump failed partitions one step, clean ones down one step
     v_s = (v_min - v_crash) / n_partitions
     v_adj = np.where(np.asarray(flags) > 0, v_map + v_s,
                      np.maximum(v_map - v_s, v_crash))
-    c2, flags2 = systolic_mac(a, b, jnp.asarray(v_adj), jnp.asarray(v_safe),
-                              block_m=block, block_n=block,
-                              block_k=min(block, k), interpret=interpret)
+    c2, flags2, n_fired2 = systolic_mac(
+        a, b, jnp.asarray(v_adj), jnp.asarray(v_safe), block_m=block,
+        block_n=block, block_k=min(block, k), interpret=interpret,
+        count_flags=True)
     energy_ratio = float(np.mean((v_adj / v_min) ** 2))
     return c2, {
         "v_static": v_map, "v_runtime": v_adj,
         "flags_static": np.asarray(flags), "flags_runtime": np.asarray(flags2),
+        # fused in-kernel flag reductions (no host-side gather needed)
+        "n_fired_static": int(n_fired), "n_fired_runtime": int(n_fired2),
         "energy_ratio_vs_nominal": energy_ratio,
     }

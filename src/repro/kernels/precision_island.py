@@ -10,10 +10,13 @@ razor_matmul flags.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .tuning import resolve_interpret
 
 
 def _quant_rows(x, levels: float):
@@ -38,9 +41,8 @@ def _kernel(a_ref, bt_ref, tier_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
-def precision_island(a: jax.Array, b: jax.Array, tiers: jax.Array, *,
-                     block_m: int = 128, block_n: int = 128,
-                     interpret: bool = True) -> jax.Array:
+def _precision_island_call(a, b, tiers, *, block_m: int, block_n: int,
+                           interpret: bool) -> jax.Array:
     m, k = a.shape
     _, n = b.shape
     gm, gn = m // block_m, n // block_n
@@ -57,3 +59,19 @@ def precision_island(a: jax.Array, b: jax.Array, tiers: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(a, b.T, tiers.astype(jnp.int32))
+
+
+def precision_island(a: jax.Array, b: jax.Array, tiers: jax.Array, *,
+                     block_m: Optional[int] = None,
+                     block_n: Optional[int] = None,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Tiered matmul; block sizes default to the island shape ``tiers``
+    implies, ``interpret`` to the platform-aware tuning default."""
+    m = a.shape[0]
+    n = b.shape[1]
+    gm, gn = tiers.shape
+    block_m = m // gm if block_m is None else block_m
+    block_n = n // gn if block_n is None else block_n
+    return _precision_island_call(a, b, tiers, block_m=block_m,
+                                  block_n=block_n,
+                                  interpret=resolve_interpret(interpret))

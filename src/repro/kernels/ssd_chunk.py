@@ -11,11 +11,14 @@ pre-broadcast from ops.py.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .tuning import resolve_interpret, select_chunk
 
 EXP_CLAMP = 30.0
 
@@ -63,12 +66,23 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, alog_ref, d_ref, s0_ref,
         sout_ref[0] = state[...]
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_chunk(x: jax.Array, dt: jax.Array, A_log: jax.Array, B: jax.Array,
               C: jax.Array, D: jax.Array, state: jax.Array, *,
-              chunk: int = 64, interpret: bool = True):
+              chunk: Optional[int] = 64, interpret: Optional[bool] = None):
     """x: (b, s, h, p); dt: (b, s, h); A_log, D: (h,); B, C: (b, s, n);
-    state: (b, h, n, p).  Returns (y (b, s, h, p), final_state)."""
+    state: (b, h, n, p).  Returns (y (b, s, h, p), final_state).
+
+    ``chunk=None`` picks the largest preferred chunk dividing the sequence;
+    ``interpret=None`` resolves to the platform-aware tuning default."""
+    chunk = select_chunk(x.shape[1]) if chunk is None else chunk
+    return _ssd_chunk_call(x, dt, A_log, B, C, D, state, chunk=chunk,
+                           interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_chunk_call(x: jax.Array, dt: jax.Array, A_log: jax.Array,
+                    B: jax.Array, C: jax.Array, D: jax.Array,
+                    state: jax.Array, *, chunk: int, interpret: bool):
     b, s, h, p = x.shape
     n = B.shape[-1]
     assert s % chunk == 0

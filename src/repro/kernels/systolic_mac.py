@@ -7,21 +7,36 @@ cell' carrying a rail voltage v_map[i, j] and a minimum safe voltage
 v_safe[i, j].  Under-volted tiles corrupt their accumulator low bits (the
 timing-failure model shared with ref.corrupt_low_bits) and raise a flag —
 exactly the per-partition Razor flag the runtime scheme consumes.
+
+``interpret`` defaults through :func:`repro.kernels.tuning.default_interpret`
+(compiled everywhere a Mosaic backend exists, interpreted only on CPU);
+``block_m``/``block_n`` default to the partition-cell shape dictated by
+``v_map`` and ``block_k`` to the tuning table's preference.  The epilogue
+optionally fuses the Razor flag reduction: with ``count_flags=True`` a
+running int32 total of fired tiles is accumulated in-kernel, so callers that
+only need "how many partitions failed" skip the host-side flag gather.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .tuning import resolve_interpret, select_blocks, sequential_grid
 
-def _kernel(a_ref, b_ref, vmap_ref, vsafe_ref, out_ref, flag_ref, acc_ref,
-            *, keep_bits: int, n_k: int):
-    k = pl.program_id(2)
+
+def _kernel(a_ref, b_ref, vmap_ref, vsafe_ref, out_ref, flag_ref, count_ref,
+            acc_ref, *, keep_bits: int, n_k: int):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0) & (k == 0))
+    def _init_count():
+        count_ref[0, 0] = 0
 
     @pl.when(k == 0)
     def _init():
@@ -41,19 +56,14 @@ def _kernel(a_ref, b_ref, vmap_ref, vsafe_ref, out_ref, flag_ref, acc_ref,
         corrupted = jax.lax.bitcast_convert_type(bits & mask, jnp.float32)
         out_ref[...] = jnp.where(fail, corrupted, acc)
         flag_ref[0, 0] = fail.astype(jnp.int32)
+        # fused Razor flag reduction: running total over all (i, j) tiles
+        count_ref[0, 0] += fail.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "keep_bits", "interpret"))
-def systolic_mac(a: jax.Array, b: jax.Array, v_map: jax.Array,
-                 v_safe: jax.Array, *, block_m: int = 128, block_n: int = 128,
-                 block_k: int = 128, keep_bits: int = 8,
-                 interpret: bool = True):
-    """C = a @ b with per-tile voltage-island fault semantics.
-
-    a: (M, K); b: (K, N); v_map/v_safe: (M/bm, N/bn).
-    Returns (C f32 (M, N), flags int32 (M/bm, N/bn)).
-    """
+def _systolic_mac_call(a, b, v_map, v_safe, *, block_m: int, block_n: int,
+                       block_k: int, keep_bits: int, interpret: bool):
     m, k = a.shape
     k2, n = b.shape
     assert k == k2 and m % block_m == 0 and n % block_n == 0 and k % block_k == 0
@@ -73,11 +83,45 @@ def systolic_mac(a: jax.Array, b: jax.Array, v_map: jax.Array,
         out_specs=[
             pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
             pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((m, n), jnp.float32),
             jax.ShapeDtypeStruct((gm, gn), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(a, b, v_map.astype(jnp.float32), v_safe.astype(jnp.float32))
+
+
+def systolic_mac(a: jax.Array, b: jax.Array, v_map: jax.Array,
+                 v_safe: jax.Array, *, block_m: Optional[int] = None,
+                 block_n: Optional[int] = None, block_k: Optional[int] = None,
+                 keep_bits: int = 8, interpret: Optional[bool] = None,
+                 count_flags: bool = False):
+    """C = a @ b with per-tile voltage-island fault semantics.
+
+    a: (M, K); b: (K, N); v_map/v_safe: (M/bm, N/bn).
+    Returns (C f32 (M, N), flags int32 (M/bm, N/bn)); with
+    ``count_flags=True`` additionally the in-kernel int32 total of fired
+    tiles.  ``block_m``/``block_n`` default to the cell shape ``v_map``
+    implies; ``block_k`` comes from the tuning table.
+    """
+    m, k = a.shape
+    n = b.shape[1]
+    gm, gn = v_map.shape
+    block_m = m // gm if block_m is None else block_m
+    block_n = n // gn if block_n is None else block_n
+    if block_k is None:
+        block_k = select_blocks(m, n, k)[2]
+    interpret = resolve_interpret(interpret)
+    c, flags, count = _systolic_mac_call(
+        a, b, v_map, v_safe, block_m=block_m, block_n=block_n,
+        block_k=block_k, keep_bits=keep_bits, interpret=interpret)
+    if not count_flags:
+        return c, flags
+    # the in-kernel accumulator relies on sequential grid execution; on
+    # parallel-grid backends (GPU) reduce the flag map on the host instead
+    total = count[0, 0] if sequential_grid(interpret) else jnp.sum(flags)
+    return c, flags, total

@@ -1,0 +1,85 @@
+"""Platform-aware compile defaults + block-size selection for the Pallas
+kernels.
+
+Two decisions every kernel wrapper needs are centralized here:
+
+* ``default_interpret()`` — whether ``pallas_call`` should run in interpret
+  mode.  Interpret mode is required on CPU (no Mosaic backend) but must NOT
+  be the default on TPU, where it silently turns compiled kernels into a
+  Python-level emulator.  Kernels take ``interpret=None`` and resolve it
+  through this function, so off-CPU callers get the real compiled path.
+
+* ``select_blocks(m, n, k)`` — block sizes chosen from the problem shape via
+  an overridable preference table.  TPU tiling wants the last dimension a
+  multiple of 128 and the sublane dimension a multiple of 8 (f32), so the
+  table prefers MXU-shaped 128/256 blocks and degrades to the largest
+  divisor of the axis; tiny problems fall back to whole-axis blocks.  Pass a
+  custom ``table`` (or mutate :data:`BLOCK_TABLE`) to pin different shapes —
+  e.g. benchmark-tuned blocks for a specific chip generation.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+
+#: Preferred block sizes per grid axis, best first.  The first entry that
+#: divides the axis wins; if none divides it, the full axis is used (the
+#: kernels assert divisibility, so a whole axis is always valid).  128 leads
+#: every axis — the MXU's native tile edge, and the established default of
+#: the kernels' former fixed ``block_*=128`` signatures.
+BLOCK_TABLE: Dict[str, Tuple[int, ...]] = {
+    "m": (128, 64, 32, 16, 8),
+    "n": (128, 64, 32, 16, 8),
+    "k": (128, 64, 32, 16, 8),
+}
+
+#: Preferred sequence-chunk lengths for the scan kernels (wkv6 / ssd_chunk).
+CHUNK_TABLE: Tuple[int, ...] = (128, 64, 32, 16, 8)
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas kernels only where no compiled backend exists."""
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def sequential_grid(interpret: bool) -> bool:
+    """Whether ``pallas_call`` grid cells execute one after another.
+
+    True in interpret mode and on TPU (Mosaic iterates the grid on one
+    core); False on GPU, where Triton launches grid cells in parallel and
+    cross-cell accumulator outputs (the fused flag counts) would race.
+    """
+    return bool(interpret) or jax.default_backend() == "tpu"
+
+
+def _pick(size: int, prefs: Sequence[int]) -> int:
+    for b in prefs:
+        if b <= size and size % b == 0:
+            return b
+    return size
+
+
+def select_blocks(m: int, n: int, k: Optional[int] = None,
+                  table: Optional[Dict[str, Sequence[int]]] = None
+                  ) -> Tuple[int, ...]:
+    """(block_m, block_n[, block_k]) for an (m, n[, k]) problem.
+
+    Every returned block divides its axis, so the kernels' divisibility
+    asserts always hold.
+    """
+    t = dict(BLOCK_TABLE)
+    if table:
+        t.update(table)
+    out = (_pick(m, t["m"]), _pick(n, t["n"]))
+    return out if k is None else out + (_pick(k, t["k"]),)
+
+
+def select_chunk(seq_len: int, prefs: Sequence[int] = CHUNK_TABLE) -> int:
+    """Largest preferred chunk length dividing ``seq_len``."""
+    return _pick(seq_len, prefs)

@@ -13,11 +13,14 @@ valid per (b, h) and reset at chunk 0.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .tuning import resolve_interpret, select_chunk
 
 EXP_CLAMP = 60.0
 
@@ -69,14 +72,25 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
         sout_ref[0] = state[...]
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
-         u: jax.Array, state: jax.Array, *, chunk: int = 64,
-         interpret: bool = True):
+         u: jax.Array, state: jax.Array, *, chunk: Optional[int] = 64,
+         interpret: Optional[bool] = None):
     """r,k,v,w_log: (b, s, h, p) f32; u: (h, p); state: (b, h, p, p).
 
     Returns (y (b, s, h, p) f32, final state (b, h, p, p)).
+
+    ``chunk=None`` picks the largest preferred chunk dividing the sequence;
+    ``interpret=None`` resolves to the platform-aware tuning default.
     """
+    chunk = select_chunk(r.shape[1]) if chunk is None else chunk
+    return _wkv6_call(r, k, v, w_log, u, state, chunk=chunk,
+                      interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _wkv6_call(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
+               u: jax.Array, state: jax.Array, *, chunk: int,
+               interpret: bool):
     b, s, h, p = r.shape
     assert s % chunk == 0
     nc = s // chunk

@@ -1,0 +1,142 @@
+"""Vectorized clustering vs the loop oracles: bit-identical labels and
+bit-identical FlowReport partition/voltage outputs.
+
+The vectorized rewrites in ``repro.core.clustering`` must replicate
+``repro.core.clustering_ref`` exactly — same merge order, same tie-breaking,
+same noise handling — across all four algorithms, multiple seeds and array
+sizes.  ``FlowConfig(impl=...)`` threads the same choice through the staged
+pipeline, so the end-to-end reports are compared too.
+
+The reference agglomerative is O(n^3) with per-merge submatrix copies and
+reference mean-shift iterates full pairwise kernels, so at the 64x64 array
+(4096 MACs) those two oracles are compared on deterministic strided
+subsamples (512 / 1024 points) to keep the suite's wall clock sane; k-means
+and DBSCAN run the full 4096 points.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import TimingModel
+from repro.core import clustering as cl
+from repro.core import clustering_ref as cl_ref
+
+SEEDS = (2021, 2022, 2023, 2024, 2025)
+SIZES = (8, 16, 64)
+
+
+def _slack(array_n: int, seed: int) -> np.ndarray:
+    return TimingModel(n=array_n, seed=seed).min_slack_flat()
+
+
+def _subsample(x: np.ndarray, limit: int) -> np.ndarray:
+    if len(x) <= limit:
+        return x
+    stride = len(x) // limit
+    return x[::stride][:limit]
+
+
+# ------------------------------------------------------- label identity ----
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("array_n", SIZES)
+def test_kmeans_matches_reference(array_n, seed):
+    x = _slack(array_n, seed)
+    np.testing.assert_array_equal(cl.kmeans(x, 4, seed=seed),
+                                  cl_ref.kmeans(x, 4, seed=seed))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("array_n", SIZES)
+def test_dbscan_matches_reference(array_n, seed):
+    x = _slack(array_n, seed)
+    spread = x.max() - x.min()
+    eps, mp = spread / 12, max(4, len(x) // 64)
+    np.testing.assert_array_equal(cl.dbscan(x, eps=eps, min_pts=mp),
+                                  cl_ref.dbscan(x, eps=eps, min_pts=mp))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("array_n", SIZES)
+def test_hierarchical_matches_reference(array_n, seed):
+    x = _subsample(_slack(array_n, seed), 512)   # oracle is O(n^3)
+    for linkage in ("average", "single", "complete"):
+        np.testing.assert_array_equal(
+            cl.hierarchical(x, 4, linkage=linkage),
+            cl_ref.hierarchical(x, 4, linkage=linkage))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("array_n", SIZES)
+def test_meanshift_matches_reference(array_n, seed):
+    x = _subsample(_slack(array_n, seed), 1024)  # oracle pairwise iterations
+    bw = 0.17 * float(x.max() - x.min())
+    np.testing.assert_array_equal(cl.meanshift(x, bandwidth=bw),
+                                  cl_ref.meanshift(x, bandwidth=bw))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_random_mixtures_match_reference(seed):
+    """Unstructured data (not the timing model's neat bands)."""
+    rng = np.random.default_rng(seed)
+    x = np.concatenate([rng.normal(i * 1.5, 0.4, 60) for i in range(4)])
+    np.testing.assert_array_equal(cl.kmeans(x, 5, seed=seed),
+                                  cl_ref.kmeans(x, 5, seed=seed))
+    np.testing.assert_array_equal(cl.hierarchical(x, 3),
+                                  cl_ref.hierarchical(x, 3))
+    np.testing.assert_array_equal(cl.meanshift(x, bandwidth=0.9),
+                                  cl_ref.meanshift(x, bandwidth=0.9))
+    np.testing.assert_array_equal(cl.dbscan(x, eps=0.25, min_pts=5),
+                                  cl_ref.dbscan(x, eps=0.25, min_pts=5))
+
+
+def test_dendrogram_matches_reference():
+    x = _slack(16, 2021)
+    dv = cl.hierarchical_dendrogram(x)
+    dr = cl_ref.hierarchical_dendrogram(x)
+    np.testing.assert_array_equal(dv.left, dr.left)
+    np.testing.assert_array_equal(dv.right, dr.right)
+    np.testing.assert_array_equal(dv.size, dr.size)
+    np.testing.assert_array_equal(dv.height, dr.height)
+    for k in (2, 3, 4, 7):
+        np.testing.assert_array_equal(dv.cut(k), dr.cut(k))
+
+
+def test_helpers_match_reference():
+    x = _slack(16, 2021)
+    lab = cl_ref.dbscan(x, eps=(x.max() - x.min()) / 12, min_pts=8)
+    np.testing.assert_array_equal(cl.relabel_by_feature_mean(x, lab),
+                                  cl_ref.relabel_by_feature_mean(x, lab))
+    np.testing.assert_array_equal(cl.relabel_by_feature_mean(x, lab,
+                                                             descending=False),
+                                  cl_ref.relabel_by_feature_mean(
+                                      x, lab, descending=False))
+    np.testing.assert_array_equal(cl.attach_noise_to_nearest(x, lab),
+                                  cl_ref.attach_noise_to_nearest(x, lab))
+    assert cl.silhouette(x, lab) == pytest.approx(cl_ref.silhouette(x, lab),
+                                                  abs=1e-12)
+
+
+# ------------------------------------------------- FlowReport identity ----
+
+
+def _report_fields(rep):
+    return (rep.labels, rep.static_v, np.asarray(rep.runtime_v),
+            rep.n_partitions, rep.baseline_mw, rep.static_mw, rep.runtime_mw,
+            rep.razor_trials, rep.xdc, rep.sdc)
+
+
+@pytest.mark.parametrize("algo", ["kmeans", "hierarchical", "meanshift",
+                                  "dbscan"])
+@pytest.mark.parametrize("array_n,seed", [(8, 2021), (8, 7), (16, 2021)])
+def test_flow_reports_bit_identical_across_impls(algo, array_n, seed):
+    from repro.flow import FlowConfig, run
+    base = dict(array_n=array_n, algo=algo, seed=seed, max_trials=16)
+    rv = run(FlowConfig(impl="vectorized", **base))
+    rr = run(FlowConfig(impl="reference", **base))
+    for a, b in zip(_report_fields(rv), _report_fields(rr)):
+        if isinstance(a, np.ndarray):
+            np.testing.assert_array_equal(a, b)
+        else:
+            assert a == b

@@ -1,0 +1,129 @@
+"""The perf plumbing added with the vectorized hot paths: FlowConfig impl /
+calibration_method knobs, content-addressed stage caching, sweep timings,
+batched bisection calibration, and the benchmark harness's output routing."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.voltage import RuntimeScheme
+from repro.flow import FlowConfig, Pipeline, run, sweep
+
+CHEAP = dict(array_n=8, max_trials=12, seed=2021)
+
+
+# ---------------------------------------------------------------- config ----
+
+def test_config_validates_impl_and_method():
+    assert FlowConfig(impl="reference").impl == "reference"
+    assert FlowConfig(calibration_method="bisect").calibration_method == "bisect"
+    with pytest.raises(ValueError, match="impl"):
+        FlowConfig(impl="turbo")
+    with pytest.raises(ValueError, match="calibration_method"):
+        FlowConfig(calibration_method="newton")
+
+
+def test_config_roundtrips_new_fields():
+    cfg = FlowConfig(impl="reference", calibration_method="bisect", **CHEAP)
+    assert FlowConfig.from_dict(cfg.to_dict()) == cfg
+
+
+# ------------------------------------------------------- content caching ----
+
+def test_sweep_shares_clustering_across_techs():
+    """Min-slack structure is tech-independent, so with content caching the
+    cluster stage runs once per algorithm, not once per (tech, algorithm)."""
+    grid = {"tech": ["vivado-28nm", "vtr-22nm"], "algo": ["kmeans", "dbscan"]}
+    res = sweep(grid, FlowConfig(**CHEAP))
+    assert len(res.reports) == 4
+    assert res.store.runs_of("cluster") == 2       # one per algo
+    assert res.store.runs_of("timing") == 2        # still one per tech
+    # floorplan keys on label *values*: both algos happen to agree at 8x8,
+    # so it can even collapse to a single run
+    assert 1 <= res.store.runs_of("floorplan") <= 2
+
+    legacy = sweep(grid, FlowConfig(**CHEAP),
+                   pipeline=Pipeline(content_cache=False))
+    assert legacy.store.runs_of("cluster") == 4    # prefix keying: per tech
+    for a, b in zip(res.reports, legacy.reports):
+        np.testing.assert_array_equal(a.labels, b.labels)
+        np.testing.assert_array_equal(np.asarray(a.runtime_v),
+                                      np.asarray(b.runtime_v))
+
+
+def test_pipeline_edits_preserve_content_cache_flag():
+    p = Pipeline(content_cache=False)
+    assert p.without("constraints").content_cache is False
+    assert Pipeline().without("constraints").content_cache is True
+
+
+def test_sweep_records_elapsed():
+    res = sweep({"algo": ["kmeans", "dbscan"]}, FlowConfig(**CHEAP))
+    assert len(res.elapsed_s) == 2
+    assert res.total_elapsed_s == pytest.approx(sum(res.elapsed_s))
+    assert all(t >= 0 for t in res.elapsed_s)
+
+
+# ----------------------------------------------------- bisect calibration ----
+
+def test_calibrate_bisect_converges_to_threshold():
+    """With a deterministic threshold oracle, bisection must land each rail
+    within tol above its true minimum safe voltage."""
+    v_min_safe = np.array([0.62, 0.71, 0.85, 0.55])
+    s = RuntimeScheme(v_s=0.05, v_floor=0.5, v_ceil=1.0)
+    out = s.calibrate_bisect(np.full(4, 0.75),
+                             lambda v: v < v_min_safe, max_trials=32,
+                             tol=1e-4)
+    assert out.all_converged
+    assert (np.asarray(out) >= v_min_safe).all()
+    assert (np.asarray(out) <= v_min_safe + 1e-3).all()
+
+
+def test_calibrate_bisect_flags_unconvergeable_rails():
+    s = RuntimeScheme(v_s=0.05, v_floor=0.5, v_ceil=1.0)
+    always_fail = np.array([False, True])
+
+    out = s.calibrate_bisect(np.full(2, 0.8),
+                             lambda v: always_fail.copy(), max_trials=16)
+    assert out.converged.tolist() == [True, False]
+    assert float(out[1]) == 1.0                    # pinned at v_ceil
+
+
+def test_flow_with_bisect_method_produces_safe_rails():
+    rep_a = run(FlowConfig(calibration_method="anneal", **CHEAP))
+    rep_b = run(FlowConfig(calibration_method="bisect", **CHEAP))
+    assert rep_b.calibrated_fail_free
+    # same partitioning; rails differ only by method resolution
+    np.testing.assert_array_equal(rep_a.labels, rep_b.labels)
+    assert np.asarray(rep_b.runtime_v).shape == np.asarray(rep_a.runtime_v).shape
+
+
+# ------------------------------------------------------ benchmark routing ----
+
+def test_benchmark_json_path_routing(tmp_path, monkeypatch):
+    import benchmarks.run as br
+    monkeypatch.setitem(br._OUT, "dir", str(tmp_path / "sub"))
+    monkeypatch.setitem(br._OUT, "json_out", None)
+    p = br._json_path("BENCH_x.json")
+    assert p == str(tmp_path / "sub" / "BENCH_x.json")
+    assert (tmp_path / "sub").is_dir()             # created on demand
+    monkeypatch.setitem(br._OUT, "json_out", str(tmp_path / "exact.json"))
+    assert br._json_path("BENCH_x.json") == str(tmp_path / "exact.json")
+
+
+def test_bench_flow_payload_schema(tmp_path, monkeypatch):
+    """Run the real flow benchmark once (fast) and validate the JSON gate
+    fields CI depends on."""
+    import benchmarks.run as br
+    monkeypatch.setitem(br._OUT, "dir", str(tmp_path))
+    monkeypatch.setitem(br._OUT, "json_out", None)
+    rows = br.bench_flow(fast=True)
+    assert any(name.startswith("flow/speedup") for name, _, _ in rows)
+    payload = json.loads((tmp_path / "BENCH_flow.json").read_text())
+    assert payload["configs"] == 16
+    assert payload["bit_identical_reports"] is True
+    assert payload["speedup"] > 1.0
+    assert len(payload["vectorized"]["per_config_s"]) == 16
+    assert payload["vectorized"]["cluster_stage_runs"] == 4
+    assert payload["reference"]["cluster_stage_runs"] == 16

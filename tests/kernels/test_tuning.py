@@ -1,0 +1,97 @@
+"""kernels.tuning: platform interpret defaults, block/chunk selection, and
+the fused Razor flag-count epilogue."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import tuning
+from repro.kernels.razor_matmul import razor_matmul
+from repro.kernels.systolic_mac import systolic_mac
+
+
+# ----------------------------------------------------------- selection ----
+
+def test_select_blocks_prefers_mxu_tiles():
+    assert tuning.select_blocks(256, 256, 256) == (128, 128, 128)
+    assert tuning.select_blocks(512, 1024, 384) == (128, 128, 128)
+
+
+def test_select_blocks_degrades_to_divisors():
+    assert tuning.select_blocks(96, 48, 40) == (32, 16, 8)
+    # prime-ish axes fall back to the whole axis (always divides)
+    assert tuning.select_blocks(100, 7, 13) == (100, 7, 13)
+
+
+def test_select_blocks_custom_table():
+    got = tuning.select_blocks(256, 256, 256, table={"m": (64,), "k": (32,)})
+    assert got == (64, 128, 32)
+
+
+def test_selected_blocks_always_divide():
+    for m in (8, 24, 100, 128, 300, 4096):
+        for axis, b in zip((m, m), tuning.select_blocks(m, m)):
+            assert axis % b == 0
+
+
+def test_select_chunk():
+    assert tuning.select_chunk(256) == 128
+    assert tuning.select_chunk(96) == 32
+    assert tuning.select_chunk(10) == 10          # nothing divides -> whole
+
+
+def test_default_interpret_matches_backend():
+    assert tuning.default_interpret() == (jax.default_backend() == "cpu")
+    assert tuning.resolve_interpret(None) == tuning.default_interpret()
+    assert tuning.resolve_interpret(True) is True
+    assert tuning.resolve_interpret(False) is False
+
+
+# ------------------------------------------------------ fused epilogue ----
+
+def _ab(m, k, n, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(k1, (m, k), jnp.float32),
+            jax.random.normal(k2, (k, n), jnp.float32))
+
+
+def test_systolic_mac_fused_count_matches_flag_sum():
+    a, b = _ab(256, 128, 256)
+    v_map = jnp.asarray([[0.9, 0.7], [0.6, 1.0]])
+    v_safe = jnp.asarray([[0.8, 0.8], [0.8, 0.8]])
+    c, flags, count = systolic_mac(a, b, v_map, v_safe, count_flags=True)
+    assert int(count) == int(np.asarray(flags).sum()) == 2
+    # default return shape is unchanged (two outputs)
+    c2, flags2 = systolic_mac(a, b, v_map, v_safe)
+    np.testing.assert_array_equal(np.asarray(flags), np.asarray(flags2))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c2))
+
+
+def test_systolic_mac_blocks_default_from_vmap_shape():
+    a, b = _ab(256, 128, 512)
+    v_map = jnp.full((2, 4), 1.0)                 # 128x128 cells
+    v_safe = jnp.full((2, 4), 0.8)
+    c, flags = systolic_mac(a, b, v_map, v_safe)
+    assert c.shape == (256, 512) and flags.shape == (2, 4)
+    assert not np.asarray(flags).any()
+
+
+def test_razor_fused_count_matches_flag_sum():
+    a, b = _ab(256, 128, 256, seed=3)
+    b = b.at[0, 0].set(500.0)                     # poison one tile's scale
+    _, flags_all, rel = razor_matmul(a, b, tol=1e-6)
+    c, flags, rel, count = razor_matmul(
+        a, b, tol=float(np.sort(np.asarray(rel).ravel())[-2] * 0.99),
+        count_flags=True)
+    assert int(count) == int(np.asarray(flags).sum()) >= 1
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 128)])
+def test_razor_defaults_match_explicit_blocks(shape):
+    m, k, n = shape
+    a, b = _ab(m, k, n, seed=1)
+    c_auto, f_auto, r_auto = razor_matmul(a, b)
+    c_exp, f_exp, r_exp = razor_matmul(a, b, block_m=128, block_n=128)
+    np.testing.assert_array_equal(np.asarray(c_auto), np.asarray(c_exp))
+    np.testing.assert_array_equal(np.asarray(f_auto), np.asarray(f_exp))
