@@ -14,7 +14,7 @@ from .power import PAPER_TABLE2, PowerModel, fit_power_exponent, model_for, \
 from .precision import (ENERGY_PER_MAC, TIERS, PrecisionController, energy_ratio,
                         static_tier_assignment, tile_headroom)
 from .razor import (DETECTED, OK, SILENT, RazorConfig, RazorMac, classify_arrival,
-                    effective_arrival, switching_activity)
+                    effective_arrival, streamed_activity, switching_activity)
 from .systolic import SimStats, SystolicSim, fast_fault_matmul
 from .timing import TECH_NODES, TechNode, TimingModel, TimingPath, delay_scale, \
     render_report_table

@@ -65,6 +65,22 @@ def switching_activity(prev_bits: np.ndarray, cur_bits: np.ndarray,
 POPCOUNT8 = np.array([bin(i).count("1") for i in range(256)], dtype=np.int64)
 
 
+def streamed_activity(a: np.ndarray, n_bits: int = 16) -> np.ndarray:
+    """(M, K) per-cycle toggle fraction of streamed real-valued activations.
+
+    Full-scale quantization to ``n_bits`` signed ints, then consecutive-row
+    :func:`switching_activity`.  The single definition shared by
+    ``SystolicSim`` and the hwloop emulator — their data-dependent delay
+    terms must stay bit-identical.
+    """
+    a = np.asarray(a)
+    scale = np.max(np.abs(a)) or 1.0
+    q = np.clip((a / scale) * (2 ** (n_bits - 1) - 1),
+                -(2 ** (n_bits - 1)), 2 ** (n_bits - 1) - 1).astype(np.int64)
+    prev = np.vstack([q[:1], q[:-1]])
+    return switching_activity(prev, q, n_bits)
+
+
 def effective_arrival(nominal_delay_ns: np.ndarray, activity: np.ndarray,
                       cfg: RazorConfig) -> np.ndarray:
     """Arrival time after data-dependent slowdown: d * (1 + beta * activity)."""

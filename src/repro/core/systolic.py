@@ -23,7 +23,7 @@ import numpy as np
 
 from .partition import Floorplan
 from .razor import (DETECTED, OK, SILENT, RazorConfig, classify_arrival,
-                    effective_arrival, switching_activity)
+                    effective_arrival, streamed_activity)
 from .timing import TimingModel
 
 
@@ -77,12 +77,7 @@ class SystolicSim:
 
     def _activity(self, a: np.ndarray) -> np.ndarray:
         """(M, n) per-cycle input toggle fraction on each row's activation bus."""
-        scale = np.max(np.abs(a)) or 1.0
-        q = np.clip((a / scale) * (2 ** (self.quant_bits - 1) - 1),
-                    -(2 ** (self.quant_bits - 1)), 2 ** (self.quant_bits - 1) - 1
-                    ).astype(np.int64)
-        prev = np.vstack([q[:1], q[:-1]])
-        return switching_activity(prev, q, self.quant_bits)
+        return streamed_activity(a, self.quant_bits)
 
     def matmul(self, a: np.ndarray, w: np.ndarray,
                v_map: Optional[np.ndarray] = None) -> Tuple[np.ndarray, SimStats]:

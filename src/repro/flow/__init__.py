@@ -33,10 +33,11 @@ from .pipeline import Pipeline, execute
 from .report import FlowReport, report_from
 from .stages import (DEFAULT_STAGE_NAMES, STAGE_REGISTRY, ClusterStage,
                      ConstraintsStage, FloorplanStage, FunctionStage,
-                     PowerStage, RuntimeCalibrationStage, Stage,
+                     HwLoopStage, PowerStage, RuntimeCalibrationStage, Stage,
                      StaticVoltageStage, TimingStage, cluster_slack,
                      default_stages, get_stage, register_stage)
-from .sweep import ROW_COLUMNS, SweepResult, expand_grid, sweep
+from .sweep import (HWLOOP_COLUMNS, ROW_COLUMNS, SweepResult, expand_grid,
+                    sweep)
 
 
 def run(cfg: "FlowConfig | None" = None, *, pipeline: "Pipeline | None" = None,
@@ -56,7 +57,8 @@ __all__ = [
     "Pipeline", "execute", "FlowReport", "report_from", "Stage",
     "FunctionStage", "TimingStage", "ClusterStage", "FloorplanStage",
     "StaticVoltageStage", "RuntimeCalibrationStage", "PowerStage",
-    "ConstraintsStage", "STAGE_REGISTRY", "DEFAULT_STAGE_NAMES",
-    "default_stages", "get_stage", "register_stage", "cluster_slack",
-    "sweep", "SweepResult", "expand_grid", "ROW_COLUMNS", "run",
+    "ConstraintsStage", "HwLoopStage", "STAGE_REGISTRY",
+    "DEFAULT_STAGE_NAMES", "default_stages", "get_stage", "register_stage",
+    "cluster_slack", "sweep", "SweepResult", "expand_grid", "ROW_COLUMNS",
+    "HWLOOP_COLUMNS", "run",
 ]

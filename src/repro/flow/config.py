@@ -65,6 +65,12 @@ class FlowConfig:
     # "bisect" = batched per-partition bisection (fewer trials, same rails up
     # to the step/tolerance difference)
     calibration_method: str = "anneal"
+    # hwloop emulation stage (repro.hwloop, opt-in via the "hwloop" stage):
+    # probe-traffic steps, streamed activation rows per step, and the
+    # silent-failure corruption model (see repro.hwloop.inject)
+    hwloop_steps: int = 8
+    hwloop_rows: int = 32
+    hwloop_corruption: str = "stale"
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "algo",
@@ -101,6 +107,23 @@ class FlowConfig:
             raise ValueError("calibration_method must be 'anneal' or 'bisect'")
         if not 0.0 < self.activity <= 1.0:
             raise ValueError("activity must be in (0, 1]")
+        if self.hwloop_steps <= 0:
+            raise ValueError("hwloop_steps must be positive")
+        if self.hwloop_rows <= 0:
+            raise ValueError("hwloop_rows must be positive")
+        if self.hwloop_corruption not in ("stale", "tedrop", "bitflip"):
+            # beyond the built-ins, accept anything in the repro.hwloop
+            # registry (user models added via register_corruption).  The
+            # import is deferred to here — never at module scope — because
+            # repro.hwloop itself imports repro.flow.
+            try:
+                from ..hwloop.inject import CORRUPTION_MODELS
+                known = sorted(CORRUPTION_MODELS)
+            except ImportError:  # pragma: no cover - mid-import edge only
+                known = ["stale", "tedrop", "bitflip"]
+            if self.hwloop_corruption not in known:
+                raise ValueError(f"unknown hwloop_corruption "
+                                 f"{self.hwloop_corruption!r}; known: {known}")
         if self.resolved_v_min() <= self.resolved_v_crash():
             raise ValueError("V_min must exceed V_crash")
 

@@ -45,6 +45,14 @@ class FlowReport:
     # (P,) bool — False where Algorithm-2 never saw a clean trial and the
     # rail was pinned at V_ceil (see voltage.CalibrationResult)
     calibration_converged: Optional[np.ndarray] = None
+    # hardware-in-the-loop emulation observables (the opt-in "hwloop" stage;
+    # None when the stage did not run)
+    hwloop_energy_per_token_j: Optional[float] = None
+    hwloop_energy_per_mac_j: Optional[float] = None
+    hwloop_replay_rate: Optional[float] = None
+    hwloop_flag_rate: Optional[list] = None          # (P,) per-partition
+    hwloop_silent_rate: Optional[float] = None
+    hwloop_rel_error: Optional[float] = None         # accuracy proxy
 
     def summary(self) -> str:
         part = (f"P={self.n_partitions}"
@@ -82,4 +90,10 @@ def report_from(art: Artifacts, cfg: "FlowConfig") -> FlowReport:
         calibrated_fail_free=art.get("calibrated_fail_free", True),
         n_partitions_requested=art.get("n_partitions_requested"),
         calibration_converged=art.get("calibration_converged"),
+        hwloop_energy_per_token_j=art.get("hwloop_energy_per_token_j"),
+        hwloop_energy_per_mac_j=art.get("hwloop_energy_per_mac_j"),
+        hwloop_replay_rate=art.get("hwloop_replay_rate"),
+        hwloop_flag_rate=art.get("hwloop_flag_rate"),
+        hwloop_silent_rate=art.get("hwloop_silent_rate"),
+        hwloop_rel_error=art.get("hwloop_rel_error"),
     )

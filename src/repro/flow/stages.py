@@ -335,6 +335,62 @@ class ConstraintsStage(Stage):
                          sdc=generate_sdc(art.floorplan_static, cfg.clock_ns))
 
 
+@register_stage
+class HwLoopStage(Stage):
+    """Hardware-in-the-loop emulation (repro.hwloop): execute probe inference
+    traffic on the calibrated voltage islands with Razor fault injection and
+    an energy ledger, yielding the voltage→(accuracy-proxy, energy/token,
+    replay-rate) observables that close the loop between the CAD flow and
+    real inference.
+
+    Opt-in: not part of :data:`DEFAULT_STAGE_NAMES`; insert it after
+    ``power`` (``repro.hwloop.hwloop_pipeline()`` does exactly that) so
+    ``sweep()`` produces Pareto tables across tech nodes.
+    """
+
+    name = "hwloop"
+    requires = ("timing_model", "floorplan_runtime", "n_partitions")
+    provides = ("hwloop_energy_per_token_j", "hwloop_energy_per_mac_j",
+                "hwloop_replay_rate", "hwloop_flag_rate",
+                "hwloop_silent_rate", "hwloop_rel_error")
+    config_keys = ("array_n", "tech", "clock_ns", "freq_mhz", "activity",
+                   "seed", "calibration_seed", "hwloop_steps", "hwloop_rows",
+                   "hwloop_corruption")
+
+    def run(self, art: Artifacts, cfg: FlowConfig) -> Artifacts:
+        # imported lazily: repro.hwloop imports repro.flow at package level,
+        # so a module-scope import here would be circular
+        from ..hwloop.device import EmulatedAccelerator
+        accel = EmulatedAccelerator(
+            art.timing_model, art.floorplan_runtime,
+            razor=RazorConfig(clock_ns=cfg.clock_ns),
+            power=model_for(cfg.tech, freq_mhz=cfg.freq_mhz,
+                            activity=cfg.activity),
+            corruption=cfg.hwloop_corruption)
+        rng = np.random.default_rng(cfg.resolved_calibration_seed() + 99_991)
+        n = cfg.array_n
+        flags = np.zeros(art.n_partitions, dtype=np.float64)
+        silent = 0
+        rel_errors = []
+        for _ in range(cfg.hwloop_steps):
+            a = rng.normal(size=(cfg.hwloop_rows, n))
+            w = rng.normal(size=(n, n))
+            _, tel = accel.matmul(a, w)
+            flags += tel.partition_flags
+            silent += int(tel.silent_p.sum())
+            rel_errors.append(tel.rel_error)
+        # one probe step stands in for one served token
+        accel.ledger.add_tokens(cfg.hwloop_steps)
+        led = accel.ledger
+        return art.with_(
+            hwloop_energy_per_token_j=led.energy_per_token_j,
+            hwloop_energy_per_mac_j=led.energy_per_mac_j,
+            hwloop_replay_rate=led.replay_rate,
+            hwloop_flag_rate=(flags / cfg.hwloop_steps).tolist(),
+            hwloop_silent_rate=silent / max(led.total_macs, 1),
+            hwloop_rel_error=float(np.mean(rel_errors)))
+
+
 #: Canonical stage order of the paper's flow.
 DEFAULT_STAGE_NAMES: Tuple[str, ...] = (
     "timing", "cluster", "floorplan", "static_voltage",

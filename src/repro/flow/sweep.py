@@ -26,6 +26,12 @@ ROW_COLUMNS = ("tech", "algo", "array_n", "seed", "n_partitions",
                "runtime_mw", "static_reduction_pct", "runtime_reduction_pct",
                "razor_trials", "calibrated_fail_free")
 
+#: Extra columns added when the opt-in ``hwloop`` emulation stage ran — the
+#: voltage→(energy/token, replay-rate, accuracy-proxy) Pareto observables.
+HWLOOP_COLUMNS = ("hwloop_energy_per_token_j", "hwloop_replay_rate",
+                  "hwloop_flag_rate", "hwloop_silent_rate",
+                  "hwloop_rel_error")
+
 
 def expand_grid(grid: Mapping[str, Sequence[Any]],
                 base: Optional[FlowConfig] = None) -> List[FlowConfig]:
@@ -61,11 +67,17 @@ class SweepResult:
     def total_elapsed_s(self) -> float:
         return float(sum(self.elapsed_s))
 
+    def _has_hwloop(self) -> bool:
+        return any(r.hwloop_energy_per_token_j is not None
+                   for r in self.reports)
+
     def rows(self) -> List[Dict[str, Any]]:
-        """Tidy comparison rows, one per config (stable column set)."""
+        """Tidy comparison rows, one per config (stable column set; the
+        hwloop columns join when the emulation stage ran)."""
         out = []
+        hwloop = self._has_hwloop()
         for cfg, rep in zip(self.configs, self.reports):
-            out.append({
+            row = {
                 "tech": rep.tech, "algo": rep.algo, "array_n": rep.array_n,
                 "seed": cfg.seed, "n_partitions": rep.n_partitions,
                 "n_partitions_requested": rep.n_partitions_requested,
@@ -75,14 +87,22 @@ class SweepResult:
                 "runtime_reduction_pct": rep.runtime_reduction_pct,
                 "razor_trials": rep.razor_trials,
                 "calibrated_fail_free": rep.calibrated_fail_free,
-            })
+            }
+            if hwloop:
+                for c in HWLOOP_COLUMNS:
+                    row[c] = getattr(rep, c)
+            out.append(row)
         return out
 
     def best(self, key: str = "runtime_reduction_pct") -> Dict[str, Any]:
         return max(self.rows(), key=lambda r: r[key])
 
-    def table(self, columns: Sequence[str] = ROW_COLUMNS) -> str:
-        """Fixed-width text table of the tidy rows."""
+    def table(self, columns: Optional[Sequence[str]] = None) -> str:
+        """Fixed-width text table of the tidy rows (hwloop columns appear
+        automatically when the emulation stage ran)."""
+        if columns is None:
+            columns = ROW_COLUMNS + (HWLOOP_COLUMNS if self._has_hwloop()
+                                     else ())
         rows = self.rows()
         cells = [[_fmt(r[c]) for c in columns] for r in rows]
         widths = [max(len(c), *(len(row[i]) for row in cells)) if cells
@@ -131,5 +151,8 @@ def _fmt(v: Any) -> str:
     if isinstance(v, bool) or v is None:
         return str(v)
     if isinstance(v, float):
-        return f"{v:.2f}"
+        # sub-centi values (energies in joules, rates) need sig-figs, not 0.00
+        return f"{v:.3g}" if 0.0 < abs(v) < 0.01 else f"{v:.2f}"
+    if isinstance(v, (list, tuple)):
+        return "[" + ",".join(_fmt(float(x)) for x in v) + "]"
     return str(v)

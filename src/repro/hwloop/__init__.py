@@ -1,0 +1,48 @@
+"""repro.hwloop — voltage-aware fault-injection & energy-accounting emulation.
+
+The missing loop between the CAD flow and real inference: a
+:class:`FlowReport`'s calibrated voltage islands become an
+:class:`EmulatedAccelerator` that executes matmuls with data-dependent
+Razor fault injection and a cycle/energy ledger; :class:`HwLoopSession`
+runs it online under the serve engine, feeding observed flag rates back
+into the flow's ``runtime_calibration`` stage (via
+:class:`~repro.runtime.monitor.CalibrationWatchdog`) so rails re-tune
+mid-serve.
+
+Quickstart::
+
+    from repro.flow import FlowConfig
+    from repro.hwloop import HwLoopSession
+
+    session = HwLoopSession(FlowConfig(array_n=8, tech="vtr-22nm",
+                                       max_trials=8))
+    tel = session.step(tokens=[17, 42])        # one serving step's traffic
+    print(session.summary()["energy_per_token_j"])
+
+Pipeline integration: the ``hwloop`` stage (``repro.flow``'s registry) adds
+voltage→(energy/token, replay-rate, accuracy-proxy) artifacts to any flow
+run; :func:`hwloop_pipeline` returns the default chain with it inserted, so
+``sweep(..., pipeline=hwloop_pipeline())`` produces Pareto tables across
+tech nodes.
+"""
+
+from .device import EmulatedAccelerator, MatmulTelemetry, quantized_activity
+from .energy import EnergyLedger
+from .inject import (CORRUPTION_MODELS, bit_flip, get_corruption,
+                     register_corruption, stale_psum, te_drop)
+from .session import HwLoopSession, StepTelemetry
+
+
+def hwloop_pipeline(**pipeline_kw):
+    """The canonical Fig. 9 stage chain with the ``hwloop`` emulation stage
+    inserted after ``power`` — ready for :func:`repro.flow.sweep`."""
+    from ..flow import Pipeline, get_stage
+    return Pipeline(**pipeline_kw).insert_after("power", get_stage("hwloop"))
+
+
+__all__ = [
+    "EmulatedAccelerator", "MatmulTelemetry", "quantized_activity",
+    "EnergyLedger", "CORRUPTION_MODELS", "register_corruption",
+    "get_corruption", "stale_psum", "te_drop", "bit_flip",
+    "HwLoopSession", "StepTelemetry", "hwloop_pipeline",
+]

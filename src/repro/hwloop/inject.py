@@ -1,0 +1,100 @@
+"""Pluggable silent-corruption models for the emulated accelerator.
+
+When a MAC's effective arrival time falls past the Razor shadow window
+(``SILENT`` in :mod:`repro.core.razor`), the error is *invisible* to the
+runtime scheme and some corrupted value reaches the output.  What that value
+is depends on the microarchitecture; the literature models it three ways:
+
+* ``"stale"``   — the paper's (and :class:`repro.core.systolic.SystolicSim`'s)
+  semantics: the MAC's output register re-emits its previous-cycle partial
+  sum, so silent rows inherit the psum of the last clean row above them
+  (a per-column forward fill).
+* ``"tedrop"``  — ThUnderVolt's TE-Drop (Zhang et al., 2018): the failing
+  MAC's multiply is dropped and the partial sum bypasses it unchanged —
+  equivalent to zeroing the failing rank-1 term.
+* ``"bitflip"`` — a single mantissa bit of the affected accumulator output is
+  flipped (classic SEU-style corruption used in undervolting studies such as
+  Salami et al., 2020).
+
+Every model is a pure function ``(terms, silent, rng) -> out`` where
+``terms`` is the ``(M, K, N)`` rank-1 term tensor of one weight tile
+(``terms[m, i, j] = a[m, i] * w[i, j]``), ``silent`` is the matching boolean
+failure mask, and ``out`` is the ``(M, N)`` corrupted tile product.  Models
+are registered by name so :class:`repro.flow.FlowConfig` can select them
+declaratively (``hwloop_corruption``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+CorruptionFn = Callable[[np.ndarray, np.ndarray, np.random.Generator],
+                        np.ndarray]
+
+CORRUPTION_MODELS: Dict[str, CorruptionFn] = {}
+
+
+def register_corruption(name: str):
+    """Decorator: make a corruption model selectable by name."""
+
+    def deco(fn: CorruptionFn) -> CorruptionFn:
+        CORRUPTION_MODELS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_corruption(name: str) -> CorruptionFn:
+    try:
+        return CORRUPTION_MODELS[name]
+    except KeyError:
+        raise KeyError(f"unknown corruption model {name!r}; registered: "
+                       f"{sorted(CORRUPTION_MODELS)}") from None
+
+
+@register_corruption("stale")
+def stale_psum(terms: np.ndarray, silent: np.ndarray,
+               rng: np.random.Generator) -> np.ndarray:
+    """Stale-register forward fill — the systolic simulator's semantics.
+
+    A silent MAC re-emits its previous-cycle output, so the psum flowing past
+    it is the one of the last clean streamed row; chained silent cycles keep
+    inheriting from the last clean row above (``np.maximum.accumulate`` over
+    the last-clean row index, exactly as in
+    ``SystolicSim._propagate_vec``).
+    """
+    m_rows, k, _ = terms.shape
+    row_ix = np.arange(m_rows)[:, None]
+    out = np.zeros((m_rows, terms.shape[2]), dtype=np.float64)
+    for i in range(k):
+        out = out + terms[:, i, :]
+        sil = silent[:, i, :]
+        if sil.any():
+            last = np.maximum.accumulate(np.where(sil, -1, row_ix), axis=0)
+            filled = np.take_along_axis(out, np.maximum(last, 0), axis=0)
+            out = np.where(sil, np.where(last >= 0, filled, 0.0), out)
+    return out
+
+
+@register_corruption("tedrop")
+def te_drop(terms: np.ndarray, silent: np.ndarray,
+            rng: np.random.Generator) -> np.ndarray:
+    """TE-Drop: the failing MAC's rank-1 contribution is zeroed; the partial
+    sum rides past it unchanged."""
+    return np.where(silent, 0.0, terms).sum(axis=1)
+
+
+@register_corruption("bitflip")
+def bit_flip(terms: np.ndarray, silent: np.ndarray,
+             rng: np.random.Generator, *, bit: int = 40) -> np.ndarray:
+    """Flip one mantissa bit of every output element whose column saw a
+    silent failure.  Bit 40 of the float64 mantissa gives a ~2^-12 relative
+    perturbation — noticeable but finite (exponent bits would explode)."""
+    out = np.ascontiguousarray(terms.sum(axis=1), dtype=np.float64)
+    hit = silent.any(axis=1)
+    if hit.any():
+        raw = out.view(np.int64)
+        raw ^= np.where(hit, np.int64(1) << bit, np.int64(0))
+    return out

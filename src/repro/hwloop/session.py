@@ -1,0 +1,150 @@
+"""Online hardware-in-the-loop session: emulate, observe, recalibrate.
+
+:class:`HwLoopSession` is the piece that makes the paper's claim *operational*
+inside the serving stack: per decode step it runs data-dependent probe
+traffic through the :class:`~repro.hwloop.device.EmulatedAccelerator`,
+feeds the observed per-partition Razor flags into the
+:class:`~repro.runtime.monitor.CalibrationWatchdog`, and — when flags
+persist past the watchdog's patience — re-runs the cached
+``runtime_calibration`` stage of :mod:`repro.flow` mid-serve (the shared
+:class:`~repro.flow.artifacts.ArtifactStore` keeps the
+timing/cluster/floorplan prefix as cache hits) and swaps the fresh rails
+onto the live device.  Lowering a rail below its safe point therefore
+raises that partition's DETECTED rate for a few steps and then heals.
+
+The session also owns token attribution for the energy ledger, so
+``energy_per_token_j`` is meaningful to the serve engine's telemetry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..flow.config import FlowConfig
+from ..runtime.monitor import CalibrationWatchdog
+from .device import EmulatedAccelerator, MatmulTelemetry
+
+
+@dataclasses.dataclass
+class StepTelemetry:
+    """What one ``step()`` observed — the serve engine's per-step payload."""
+
+    flags: np.ndarray               # (P,) bool DETECTED flags this step
+    detected_p: np.ndarray          # (P,) DETECTED counts
+    silent_p: np.ndarray            # (P,) SILENT counts (oracle-only view)
+    rel_error: float
+    recalibrated: bool              # the watchdog re-ran Algorithm 2
+
+
+class HwLoopSession:
+    """Voltage-aware emulation loop bound to one CAD-flow operating point.
+
+    ``flow_config``  — the operating point; the session's watchdog runs the
+    full Fig. 9 flow once up front (cached in ``store``).
+    ``probe_rows``   — streamed activation rows per probe matmul.
+    ``rail_margin``  — guard band added on top of the calibrated rails (both
+    at init and after every recalibration); 0 runs exactly at the
+    Algorithm-2 rails, which sit at the edge of the clean region by
+    construction.
+    """
+
+    def __init__(self, flow_config: FlowConfig, *,
+                 corruption: str = "stale",
+                 patience: int = 3,
+                 store=None,
+                 probe_rows: int = 16,
+                 rail_margin: float = 0.0,
+                 leak_frac: float = 0.05,
+                 seed: int = 0):
+        self.config = flow_config
+        self.rail_margin = float(rail_margin)
+        self.watchdog = CalibrationWatchdog(flow_config, patience=patience,
+                                            store=store)
+        self.accel = EmulatedAccelerator.from_flow(
+            self.watchdog.report, flow_config, corruption=corruption,
+            leak_frac=leak_frac, seed=seed)
+        self.accel.set_rails(self._guarded(self.watchdog.runtime_v))
+        self.probe_rows = int(probe_rows)
+        self._seed = int(seed)
+        self.steps = 0
+        self.recalibrations = 0
+        self.flag_history: List[np.ndarray] = []
+
+    def _guarded(self, rails: np.ndarray) -> np.ndarray:
+        return np.asarray(rails, dtype=np.float64) + self.rail_margin
+
+    # -- experiment knobs -----------------------------------------------------
+
+    @property
+    def n_partitions(self) -> int:
+        return self.accel.n_partitions
+
+    @property
+    def rails(self) -> np.ndarray:
+        return self.accel.rails
+
+    def set_partition_voltage(self, partition: int, v: float) -> None:
+        """Lower (or raise) one rail live — the undervolting experiment.  A
+        rail below the partition's safe point raises its DETECTED rate and,
+        after the watchdog's patience, triggers a mid-serve recalibration
+        that restores safe rails."""
+        self.accel.set_partition_voltage(partition, v)
+
+    # -- the loop --------------------------------------------------------------
+
+    def step(self, tokens: Sequence[int],
+             n_tokens: Optional[int] = None) -> StepTelemetry:
+        """Emulate one serving step's accelerator traffic.
+
+        ``tokens`` are the token ids the model emitted this step; the probe
+        activations are derived from them deterministically, so the
+        switching-activity term (and hence the failure probability at NTC)
+        is data-dependent, as in the paper.  ``n_tokens`` (default
+        ``len(tokens)``) is attributed to the energy ledger.
+        """
+        toks = np.atleast_1d(np.asarray(tokens, dtype=np.int64))
+        n_tokens = len(toks) if n_tokens is None else int(n_tokens)
+        n = self.accel.timing.n
+        rng = np.random.default_rng(
+            (self._seed * 1_000_003 + self.steps * 7919
+             + int(toks.sum() % (2 ** 31))) & 0x7FFFFFFF)
+        a = rng.normal(size=(self.probe_rows, n))
+        w = rng.normal(size=(n, n))
+        _, tel = self.accel.matmul(a, w)
+        self.accel.ledger.add_tokens(n_tokens)
+
+        flags = np.asarray(tel.partition_flags, dtype=bool)
+        self.flag_history.append(flags)
+        report = self.watchdog.observe(flags)
+        recalibrated = report is not None
+        if recalibrated:
+            self.recalibrations += 1
+            self.accel.set_rails(self._guarded(np.asarray(report.runtime_v)))
+        self.steps += 1
+        return StepTelemetry(flags=flags, detected_p=tel.detected_p,
+                             silent_p=tel.silent_p, rel_error=tel.rel_error,
+                             recalibrated=recalibrated)
+
+    # -- telemetry -------------------------------------------------------------
+
+    def flag_rate(self) -> np.ndarray:
+        """(P,) fraction of steps on which each partition's flag fired."""
+        if not self.flag_history:
+            return np.zeros(self.n_partitions)
+        return np.mean(np.asarray(self.flag_history, dtype=np.float64), axis=0)
+
+    def summary(self) -> Dict[str, Any]:
+        """Plain-JSON telemetry: flag rates, rails, recalibrations, energy."""
+        return {
+            "steps": self.steps,
+            "flag_rate": self.flag_rate().tolist(),
+            "recalibrations": self.recalibrations,
+            "watchdog_recalibrations": self.watchdog.recalibrations,
+            "rails_v": self.rails.tolist(),
+            "rail_margin_v": self.rail_margin,
+            "corruption": self.accel.corruption,
+            **self.accel.ledger.summary(),
+        }

@@ -15,6 +15,11 @@ Flags:
                                  exhaustion reports truncated/unserved counts
     --json-out PATH              dump full EngineStats telemetry as JSON
                                  (prefill/decode steps, TTFT, occupancy, ...)
+    --hwloop                     attach a repro.hwloop emulated accelerator
+                                 (continuous engine only): per-step Razor
+                                 flags + energy/token join the telemetry
+    --hwloop-tech / --hwloop-array-n
+                                 the emulated array's operating point
 """
 
 from __future__ import annotations
@@ -46,13 +51,27 @@ def main() -> None:
     ap.add_argument("--max-steps", type=int, default=10_000)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", type=str, default=None)
+    ap.add_argument("--hwloop", action="store_true")
+    ap.add_argument("--hwloop-tech", default="vtr-22nm")
+    ap.add_argument("--hwloop-array-n", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     api = model_api(cfg)
     params = api.init_params(jax.random.PRNGKey(args.seed))
     engine_cls = ServeEngine if args.engine == "continuous" else WaveServeEngine
-    engine = engine_cls(cfg, params, slots=args.slots, max_len=args.max_len)
+    engine_kw = {}
+    if args.hwloop:
+        if args.engine != "continuous":
+            ap.error("--hwloop requires the continuous engine")
+        from ..flow import FlowConfig
+        from ..hwloop import HwLoopSession
+        engine_kw["hwloop"] = HwLoopSession(
+            FlowConfig(array_n=args.hwloop_array_n, tech=args.hwloop_tech,
+                       max_trials=8, seed=2021),
+            probe_rows=8, rail_margin=0.02)
+    engine = engine_cls(cfg, params, slots=args.slots, max_len=args.max_len,
+                        **engine_kw)
 
     rng = np.random.default_rng(args.seed)
     reqs = []
@@ -80,6 +99,14 @@ def main() -> None:
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt {r.prompt} -> {r.out_tokens}"
               f"{' (truncated)' if r.truncated else ''}")
+    if stats.hwloop:
+        hw = stats.hwloop
+        rates = ", ".join(f"{x:.2f}" for x in hw["flag_rate"])
+        e = hw["energy_per_token_j"]        # None when no decode step ran
+        print(f"[hwloop] {hw['steps']} emulated steps, flag rates [{rates}], "
+              f"{hw['recalibrations']} recalibrations, "
+              f"{'n/a' if e is None else f'{e:.3g}'} J/token "
+              f"(replay rate {hw['replay_rate']:.2e})")
     if args.json_out:
         payload = {"arch": args.arch, "engine": args.engine,
                    "slots": args.slots, "max_len": args.max_len,

@@ -29,7 +29,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Deque, Dict, List
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +56,13 @@ class EngineStats:
     tokens_generated: int = 0
     slot_busy_steps: List[int] = dataclasses.field(default_factory=list)
     ttft_s: List[float] = dataclasses.field(default_factory=list)
+    # hardware-in-the-loop emulation telemetry (continuous engine with a
+    # repro.hwloop session attached; empty/None otherwise): per decode step
+    # the per-partition Razor flags, plus the session's final summary
+    # (flag rates, rails, recalibrations, energy/token)
+    hwloop_step_flags: List[List[bool]] = dataclasses.field(
+        default_factory=list)
+    hwloop: Optional[Dict[str, Any]] = None
 
     @property
     def model_steps(self) -> int:
@@ -80,12 +87,17 @@ class ServeEngine:
     """Continuous-batching engine over a fixed number of decode slots."""
 
     def __init__(self, cfg: ModelConfig, params: Pytree, slots: int = 4,
-                 max_len: int = 128):
+                 max_len: int = 128, hwloop=None):
         self.cfg = cfg
         self.api = model_api(cfg)
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        # optional repro.hwloop.HwLoopSession (duck-typed to avoid importing
+        # the hwloop package here): each decode step's emitted tokens drive
+        # one emulated accelerator step; its Razor flags and energy ledger
+        # surface in EngineStats
+        self.hwloop = hwloop
         self.scheduler = SlotScheduler(slots)
         self.stats = EngineStats(slot_busy_steps=[0] * slots)
         self._shape = ShapeConfig("serve", max_len, slots, "decode")
@@ -218,10 +230,17 @@ class ServeEngine:
         self.stats.decode_steps += 1
         used += 1
         lg = np.asarray(logits)
+        step_tokens: List[int] = []
         for slot, req in list(self.scheduler.active.items()):
             self.stats.slot_busy_steps[slot] += 1
-            self._emit(slot, req, int(lg[slot].argmax()))
+            tok = int(lg[slot].argmax())
+            self._emit(slot, req, tok)
+            step_tokens.append(tok)
             self._maybe_finish(slot, req)
+        if self.hwloop is not None and step_tokens:
+            tel = self.hwloop.step(step_tokens, n_tokens=len(step_tokens))
+            self.stats.hwloop_step_flags.append(
+                [bool(f) for f in np.asarray(tel.flags)])
         return used
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
@@ -239,6 +258,8 @@ class ServeEngine:
             req.finish_t = time.monotonic()
             self.stats.truncated += 1
         self.stats.unserved = self.scheduler.n_pending
+        if self.hwloop is not None:
+            self.stats.hwloop = self.hwloop.summary()
         return self.stats
 
 

@@ -83,3 +83,84 @@ def test_razor_doubles_sampling_not_free():
     for i in range(5):
         mac.cycle(1.0, float(i), 0.0, activity=0.0)
     assert mac.replays == 5
+
+
+# ---------------------------------------------------------------------------
+# Boundary/property tests for classify_arrival and switching_activity
+# (previously only exercised indirectly through the systolic simulator)
+# ---------------------------------------------------------------------------
+
+
+def test_classify_exact_window_edges():
+    """The windows are half-open on the left: arrival == T is still OK
+    (setup met exactly), arrival == T + t_del is still DETECTED (the shadow
+    register samples it), and only strictly beyond is SILENT."""
+    T, D = CFG.clock_ns, CFG.t_del_ns
+    eps = 1e-9
+    a = np.array([T - eps, T, T + eps, T + D - eps, T + D, T + D + eps])
+    np.testing.assert_array_equal(
+        classify_arrival(a, CFG),
+        [OK, OK, DETECTED, DETECTED, DETECTED, SILENT])
+
+
+@given(st.floats(0.1, 50.0), st.floats(0.1, 50.0))
+@settings(max_examples=200, deadline=None)
+def test_classify_monotone_in_arrival(a, b):
+    """Later arrivals can only be as bad or worse: OK <= DETECTED <= SILENT
+    is monotone in arrival time."""
+    lo, hi = sorted((a, b))
+    s_lo = int(classify_arrival(np.float64(lo), CFG))
+    s_hi = int(classify_arrival(np.float64(hi), CFG))
+    assert s_lo <= s_hi
+
+
+@given(st.floats(0.1, 30.0), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_effective_arrival_monotone_in_activity(delay, act_a, act_b):
+    """Paper Sec. II-E: more input-bit fluctuation never *reduces* the
+    effective arrival time, so failures are monotone in activity."""
+    lo, hi = sorted((act_a, act_b))
+    arr_lo = float(effective_arrival(np.float64(delay), np.float64(lo), CFG))
+    arr_hi = float(effective_arrival(np.float64(delay), np.float64(hi), CFG))
+    assert arr_lo <= arr_hi
+    assert int(classify_arrival(np.float64(arr_lo), CFG)) <= \
+        int(classify_arrival(np.float64(arr_hi), CFG))
+
+
+@given(st.integers(0, 2**16 - 1))
+@settings(max_examples=100, deadline=None)
+def test_switching_activity_self_is_zero(x):
+    assert switching_activity(np.array([x]), np.array([x]), 16)[0] == 0.0
+
+
+@given(st.integers(0, 2**16 - 1), st.integers(0, 2**16 - 1))
+@settings(max_examples=100, deadline=None)
+def test_switching_activity_symmetric(a, b):
+    fwd = switching_activity(np.array([a]), np.array([b]), 16)[0]
+    rev = switching_activity(np.array([b]), np.array([a]), 16)[0]
+    assert fwd == rev
+
+
+@given(st.integers(0, 2**16 - 1), st.integers(0, 15))
+@settings(max_examples=100, deadline=None)
+def test_switching_activity_single_bit_toggle(x, bit):
+    """Toggling exactly one in-range bit moves the activity by exactly
+    1/n_bits."""
+    act = switching_activity(np.array([x]), np.array([x ^ (1 << bit)]), 16)[0]
+    assert act == pytest.approx(1.0 / 16)
+
+
+def test_switching_activity_counts_exact_toggles():
+    """Known bit patterns: the popcount of the XOR, normalized by width."""
+    prev = np.array([0x0000, 0xFFFF, 0xAAAA, 0x00FF])
+    cur = np.array([0xFFFF, 0xFFFF, 0x5555, 0x0F0F])
+    act = switching_activity(prev, cur, n_bits=16)
+    np.testing.assert_allclose(act, [1.0, 0.0, 1.0, 8 / 16])
+
+
+def test_switching_activity_masks_to_width():
+    """Bits above n_bits are ignored: only in-width toggles count."""
+    act = switching_activity(np.array([0]), np.array([1 << 8]), n_bits=8)
+    assert act[0] == 0.0
+    act16 = switching_activity(np.array([0]), np.array([1 << 8]), n_bits=16)
+    assert act16[0] == pytest.approx(1.0 / 16)

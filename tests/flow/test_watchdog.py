@@ -65,3 +65,32 @@ def test_watchdog_unconverged_retries_are_bounded(monkeypatch):
     # persistent Razor failures still trigger, independent of the cap
     assert wd.observe([True] * p) is None
     assert wd.observe([True] * p) is not None
+
+
+def test_recalibration_reuses_cached_upstream_artifacts():
+    """End to end: persistent partition flags trigger a re-calibration that
+    re-executes ONLY the calibration suffix — the timing / cluster /
+    floorplan / static-voltage prefix must come back as cache hits from the
+    shared artifact store."""
+    wd = CalibrationWatchdog(
+        FlowConfig(array_n=8, tech="vtr-22nm", max_trials=12, seed=2021),
+        patience=1)
+    p = wd.report.n_partitions
+    # the initial flow populated the store: every stage ran exactly once
+    for stage in ("timing", "cluster", "floorplan", "static_voltage",
+                  "runtime_calibration", "power"):
+        assert wd.store.runs_of(stage) == 1, stage
+    baseline_hits = {s: wd.store.stats[s].hits
+                     for s in ("timing", "cluster", "floorplan")}
+
+    report = wd.observe([True] + [False] * (p - 1))   # patience 1 -> recal
+    assert report is not None and wd.recalibrations == 1
+    # prefix stages did NOT re-execute ...
+    for stage in ("timing", "cluster", "floorplan", "static_voltage"):
+        assert wd.store.runs_of(stage) == 1, stage
+    # ... they were served from cache (hit counters advanced) ...
+    for stage, before in baseline_hits.items():
+        assert wd.store.stats[stage].hits > before, stage
+    # ... and only the calibration suffix ran again
+    assert wd.store.runs_of("runtime_calibration") == 2
+    assert report.n_partitions == p

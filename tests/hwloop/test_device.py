@@ -1,0 +1,171 @@
+"""EmulatedAccelerator: nominal-voltage parity, undervolting flag rates,
+corruption models, and energy accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core import TECH_NODES
+from repro.flow import FlowConfig, run
+from repro.hwloop import EmulatedAccelerator, get_corruption
+
+CFG = FlowConfig(array_n=8, tech="vtr-22nm", max_trials=8, seed=2021)
+
+
+@pytest.fixture(scope="module")
+def report():
+    return run(CFG)
+
+
+def _nominal(report, **kw):
+    rails = np.full(report.n_partitions, CFG.node.v_nom)
+    return EmulatedAccelerator.from_flow(report, CFG, rails=rails, **kw)
+
+
+def test_nominal_voltage_is_bit_identical_to_ideal(report):
+    """Acceptance: at nominal rails no error is injected and the product is
+    bit-identical to the ideal kernel — while the energy ledger still
+    accounts the work."""
+    accel = _nominal(report)
+    rng = np.random.default_rng(0)
+    a, w = rng.normal(size=(32, 8)), rng.normal(size=(8, 8))
+    c, tel = accel.matmul(a, w)
+    assert np.array_equal(c, a @ w)                 # bit-identical
+    assert tel.detected_p.sum() == 0 and tel.silent_p.sum() == 0
+    assert not tel.partition_flags.any()
+    assert tel.rel_error == 0.0
+    # the ledger is populated regardless of faults
+    assert accel.ledger.dynamic_j > 0
+    assert accel.ledger.leakage_j > 0
+    assert accel.ledger.total_macs == 32 * 8 * 8
+    assert accel.ledger.replay_cycles == 0
+
+
+def test_multi_tile_shapes_cover_all_macs(report):
+    """(M, K) @ (K, N) with K, N not multiples of the array size tile
+    correctly and account exactly M*K*N MAC ops."""
+    accel = _nominal(report)
+    rng = np.random.default_rng(1)
+    a, w = rng.normal(size=(5, 20)), rng.normal(size=(20, 13))
+    c, tel = accel.matmul(a, w)
+    np.testing.assert_allclose(c, a @ w, rtol=1e-12)
+    assert tel.macs_p.sum() == 5 * 20 * 13
+
+
+def test_undervolting_raises_partition_detected_rate(report):
+    """Acceptance: lowering one partition's rail below its safe voltage
+    measurably raises THAT partition's DETECTED flag rate; others stay
+    clean."""
+    accel = EmulatedAccelerator.from_flow(report, CFG)
+    rng = np.random.default_rng(2)
+    a, w = rng.normal(size=(32, 8)), rng.normal(size=(8, 8))
+    _, tel_before = accel.matmul(a, w)
+
+    v_safe = float(accel.timing.min_safe_voltage()
+                   [accel._part_grid == 0].max())
+    accel.set_partition_voltage(0, v_safe - 0.02)
+    _, tel_after = accel.matmul(a, w)
+    assert tel_after.detected_rate[0] > tel_before.detected_rate[0]
+    assert tel_after.detected_p[0] > 0
+    assert tel_after.partition_flags[0]
+    # partitions whose rails were untouched keep their flag state
+    np.testing.assert_array_equal(tel_after.partition_flags[1:],
+                                  tel_before.partition_flags[1:])
+
+
+def test_rails_validation(report):
+    with pytest.raises(ValueError, match="rail"):
+        EmulatedAccelerator.from_flow(report, CFG, rails=np.array([1.0]))
+
+
+def _silent_setup(corruption, report):
+    """Device with every rail deep in the crash region: silent failures."""
+    accel = EmulatedAccelerator.from_flow(
+        report, CFG, rails=np.full(report.n_partitions, 0.58),
+        corruption=corruption)
+    rng = np.random.default_rng(3)
+    return accel, rng.normal(size=(16, 8)), rng.normal(size=(8, 8))
+
+
+@pytest.mark.parametrize("corruption", ["stale", "tedrop", "bitflip"])
+def test_corruption_models_corrupt_silently(corruption, report):
+    accel, a, w = _silent_setup(corruption, report)
+    c, tel = accel.matmul(a, w)
+    assert tel.silent_p.sum() > 0
+    assert tel.rel_error > 0
+    assert not np.array_equal(c, a @ w)
+    assert np.isfinite(c).all()                 # corrupted, never inf/nan
+
+
+def test_tedrop_drops_failing_terms(report):
+    """TE-Drop semantics: the corrupted product equals the sum of the
+    non-silent rank-1 terms (reconstructed from the status the device
+    classified)."""
+    accel, a, w = _silent_setup("tedrop", report)
+    c, tel = accel.matmul(a, w)
+    # reconstruct the mask exactly as the device classified it
+    from repro.core.razor import SILENT, classify_arrival, effective_arrival
+    from repro.hwloop import quantized_activity
+    act = quantized_activity(a, accel.quant_bits)
+    arrival = effective_arrival(accel.timing.delays_at(accel.v_map)[None],
+                                act[:, :, None], accel.razor)
+    sil = classify_arrival(arrival, accel.razor) == SILENT
+    terms = a[:, :, None] * w[None, :, :]
+    np.testing.assert_array_equal(c, np.where(sil, 0.0, terms).sum(axis=1))
+
+
+def test_stale_matches_systolic_simulator_semantics(report):
+    """The "stale" model is the simulator's forward-fill, so a single-tile
+    emulated matmul must agree with SystolicSim.matmul bit for bit."""
+    from repro.core import RazorConfig, SystolicSim, TimingModel
+
+    tm = TimingModel(n=8, clock_ns=CFG.clock_ns, tech=CFG.node, seed=CFG.seed)
+    fp = report.floorplan.with_voltages([0.58] * report.n_partitions)
+    sim = SystolicSim(tm, fp, RazorConfig(clock_ns=CFG.clock_ns))
+    accel = EmulatedAccelerator(
+        tm, fp, razor=RazorConfig(clock_ns=CFG.clock_ns), corruption="stale")
+    rng = np.random.default_rng(4)
+    a, w = rng.normal(size=(16, 8)), rng.normal(size=(8, 8))
+    c_sim, stats = sim.matmul(a, w)
+    c_emu, tel = accel.matmul(a, w)
+    np.testing.assert_array_equal(c_emu, c_sim)
+    assert tel.silent_p.sum() == stats.silent.sum()
+    assert tel.replay_cycles == stats.replay_cycles
+
+
+def test_energy_tracks_voltage_and_replays(report):
+    """Lower rails cost less dynamic energy per MAC (P ~ V^k); replays add
+    energy on top."""
+    from repro.core import model_for
+    pm = model_for(CFG.tech)
+    lo = pm.energy_per_mac_pj(0.8)
+    hi = pm.energy_per_mac_pj(1.0)
+    assert lo < hi
+
+    accel = _nominal(report)
+    rng = np.random.default_rng(5)
+    a, w = rng.normal(size=(16, 8)), rng.normal(size=(8, 8))
+    accel.matmul(a, w)
+    assert accel.ledger.replay_j == 0.0
+
+    # a rail in the detection window: replays fire, replay energy accrues
+    v_safe = float(accel.timing.min_safe_voltage().max())
+    accel.set_rails(np.full(report.n_partitions, v_safe - 0.02))
+    _, tel = accel.matmul(a, w)
+    assert tel.replay_cycles > 0
+    assert accel.ledger.replay_j > 0.0
+    assert accel.ledger.replay_rate > 0.0
+
+
+def test_energy_per_token_requires_token_attribution(report):
+    accel = _nominal(report)
+    rng = np.random.default_rng(6)
+    accel.matmul(rng.normal(size=(8, 8)), rng.normal(size=(8, 8)))
+    assert accel.ledger.energy_per_token_j is None      # no tokens yet
+    accel.ledger.add_tokens(4)
+    e = accel.ledger.energy_per_token_j
+    assert e is not None and np.isfinite(e) and e > 0
+
+
+def test_unknown_corruption_model_rejected():
+    with pytest.raises(KeyError, match="unknown corruption"):
+        get_corruption("nope")

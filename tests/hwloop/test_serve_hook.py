@@ -1,0 +1,70 @@
+"""ServeEngine x HwLoopSession: per-step flag + energy telemetry rides the
+engine's EngineStats."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.flow import FlowConfig
+from repro.hwloop import HwLoopSession
+from repro.models import model_api
+from repro.serve import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("starcoder2-3b", smoke=True)
+    api = model_api(cfg)
+    return cfg, api.init_params(jax.random.PRNGKey(0))
+
+
+def test_engine_surfaces_hwloop_telemetry(dense):
+    cfg, params = dense
+    session = HwLoopSession(
+        FlowConfig(array_n=8, tech="vtr-22nm", max_trials=8, seed=2021),
+        probe_rows=8, rail_margin=0.02)
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, hwloop=session)
+    reqs = [Request(uid=i, prompt=[3 + i, 4 + i], max_new_tokens=3)
+            for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    assert stats.completed == 3
+
+    # one emulated step per decode step, one flag vector per step
+    assert len(stats.hwloop_step_flags) == stats.decode_steps
+    assert all(len(f) == session.n_partitions
+               for f in stats.hwloop_step_flags)
+    # summary telemetry: energy attributed to the decode-step tokens
+    hw = stats.hwloop
+    assert hw is not None
+    assert hw["steps"] == stats.decode_steps
+    # each admission's first token comes from prefill logits, outside the
+    # emulated decode loop; everything else is attributed to the ledger
+    assert hw["tokens"] == stats.tokens_generated - stats.admitted
+    e = hw["energy_per_token_j"]
+    assert e is not None and np.isfinite(e) and e > 0
+    assert len(hw["flag_rate"]) == session.n_partitions
+    json.dumps(stats.to_dict())          # whole telemetry is plain JSON
+
+
+def test_outputs_unchanged_by_emulation(dense):
+    """The emulation observes the engine — it must not perturb decoding."""
+    cfg, params = dense
+
+    def drain(hwloop):
+        eng = ServeEngine(cfg, params, slots=2, max_len=32, hwloop=hwloop)
+        reqs = [Request(uid=i, prompt=[5 + i], max_new_tokens=3)
+                for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        return [r.out_tokens for r in reqs]
+
+    session = HwLoopSession(
+        FlowConfig(array_n=8, tech="vtr-22nm", max_trials=8, seed=2021),
+        probe_rows=8, rail_margin=0.02)
+    assert drain(None) == drain(session)

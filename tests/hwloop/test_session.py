@@ -1,0 +1,80 @@
+"""HwLoopSession: the online loop — undervolt, flag, recalibrate, heal —
+plus artifact-cache reuse across the mid-serve recalibration."""
+
+import numpy as np
+import pytest
+
+from repro.flow import FlowConfig
+from repro.hwloop import HwLoopSession
+
+CFG = FlowConfig(array_n=8, tech="vtr-22nm", max_trials=12, seed=2021)
+
+
+@pytest.fixture
+def session():
+    return HwLoopSession(CFG, patience=2, rail_margin=0.05, probe_rows=8)
+
+
+def test_clean_steps_produce_no_flags_and_account_energy(session):
+    for i in range(4):
+        tel = session.step([3 + i, 11 * i])
+        assert not tel.flags.any()
+        assert not tel.recalibrated
+        assert tel.rel_error == 0.0
+    assert session.recalibrations == 0
+    assert np.all(session.flag_rate() == 0.0)
+    s = session.summary()
+    assert s["steps"] == 4 and s["tokens"] == 8
+    assert s["energy_per_token_j"] > 0 and np.isfinite(s["energy_per_token_j"])
+
+
+def test_undervolt_flags_then_watchdog_recalibrates_and_heals(session):
+    """Acceptance: a rail below its safe point raises that partition's
+    DETECTED rate; after the watchdog's patience the cached
+    runtime_calibration stage re-runs mid-serve and the rails heal."""
+    session.step([5])                                  # clean warm-up
+    v_safe = float(session.accel.timing.min_safe_voltage()
+                   [session.accel._part_grid == 0].max())
+    session.set_partition_voltage(0, v_safe - 0.02)
+
+    recal_at = None
+    for i in range(6):
+        tel = session.step([17, i])
+        if tel.recalibrated:
+            recal_at = i
+            break
+        assert tel.flags[0]                            # flag fires every step
+    assert recal_at is not None and session.recalibrations == 1
+    # rails healed: back above the undervolted value, with the guard band
+    assert session.rails[0] > v_safe - 0.02
+    np.testing.assert_allclose(
+        session.rails, np.asarray(session.watchdog.runtime_v) + 0.05)
+    # and the loop is clean again
+    tel = session.step([23])
+    assert not tel.flags.any()
+    # per-partition flag-rate telemetry reflects the episode
+    assert session.flag_rate()[0] > 0
+    assert session.summary()["recalibrations"] == 1
+
+
+def test_recalibration_reuses_cached_prefix(session):
+    """The mid-serve re-run only re-executes the calibration suffix; the
+    timing/cluster/floorplan prefix is served from the shared store."""
+    store = session.watchdog.store
+    v_safe = float(session.accel.timing.min_safe_voltage()
+                   [session.accel._part_grid == 0].max())
+    session.set_partition_voltage(0, v_safe - 0.02)
+    for _ in range(4):
+        if session.step([9]).recalibrated:
+            break
+    assert session.recalibrations == 1
+    for stage in ("timing", "cluster", "floorplan", "static_voltage"):
+        assert store.runs_of(stage) == 1, stage
+    assert store.runs_of("runtime_calibration") == 2
+
+
+def test_step_telemetry_feeds_engine_shapes(session):
+    tel = session.step([1, 2, 3], n_tokens=3)
+    assert tel.flags.shape == (session.n_partitions,)
+    assert tel.detected_p.shape == (session.n_partitions,)
+    assert session.accel.ledger.tokens == 3

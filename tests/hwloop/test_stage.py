@@ -1,0 +1,74 @@
+"""The `hwloop` flow stage + sweep integration: voltage→(energy/token,
+replay-rate) Pareto tables across tech nodes."""
+
+import numpy as np
+import pytest
+
+from repro.flow import (HWLOOP_COLUMNS, FlowConfig, Pipeline, get_stage, run,
+                        sweep)
+from repro.hwloop import hwloop_pipeline
+
+BASE = FlowConfig(array_n=8, max_trials=8, seed=2021, hwloop_steps=4,
+                  hwloop_rows=8)
+
+
+def test_hwloop_stage_is_registered_and_opt_in():
+    assert get_stage("hwloop").name == "hwloop"
+    pipe = hwloop_pipeline()
+    names = [s.name for s in pipe.stages]
+    assert "hwloop" in names
+    assert names.index("hwloop") == names.index("power") + 1
+    # the default chain stays untouched
+    assert "hwloop" not in [s.name for s in Pipeline().stages]
+
+
+def test_run_with_hwloop_stage_populates_report():
+    rep = run(BASE, pipeline=hwloop_pipeline())
+    assert rep.hwloop_energy_per_token_j is not None
+    assert np.isfinite(rep.hwloop_energy_per_token_j)
+    assert rep.hwloop_energy_per_token_j > 0
+    assert rep.hwloop_replay_rate is not None and rep.hwloop_replay_rate >= 0
+    assert len(rep.hwloop_flag_rate) == rep.n_partitions
+    # default run (no hwloop stage): fields stay None
+    rep_plain = run(BASE)
+    assert rep_plain.hwloop_energy_per_token_j is None
+
+
+def test_sweep_produces_pareto_table_across_tech_nodes():
+    """Acceptance: sweep() with the hwloop stage yields a voltage→
+    (energy/token, replay-rate) table for >= 2 tech nodes."""
+    res = sweep({"tech": ["vtr-22nm", "vtr-45nm"]}, BASE,
+                pipeline=hwloop_pipeline())
+    rows = res.rows()
+    assert len(rows) == 2
+    for row in rows:
+        for col in HWLOOP_COLUMNS:
+            assert col in row, col
+        assert np.isfinite(row["hwloop_energy_per_token_j"])
+        assert row["hwloop_energy_per_token_j"] > 0
+        assert row["hwloop_replay_rate"] >= 0
+        assert len(row["hwloop_flag_rate"]) == row["n_partitions"]
+    # distinct tech nodes -> distinct energy operating points
+    assert rows[0]["hwloop_energy_per_token_j"] != \
+        rows[1]["hwloop_energy_per_token_j"]
+    # the rendered table carries the hwloop columns automatically
+    header = res.table().splitlines()[0]
+    assert "hwloop_energy_per_token_j" in header
+
+
+def test_sweep_without_hwloop_stage_keeps_stable_columns():
+    res = sweep({"tech": ["vtr-22nm"]}, BASE)
+    assert "hwloop_energy_per_token_j" not in res.rows()[0]
+    assert "hwloop_energy_per_token_j" not in res.table().splitlines()[0]
+
+
+def test_config_validates_hwloop_fields():
+    with pytest.raises(ValueError, match="hwloop_corruption"):
+        FlowConfig(hwloop_corruption="nope")
+    with pytest.raises(ValueError, match="hwloop_steps"):
+        FlowConfig(hwloop_steps=0)
+    with pytest.raises(ValueError, match="hwloop_rows"):
+        FlowConfig(hwloop_rows=-1)
+    # round-trips through the serializer with the new fields
+    cfg = FlowConfig(hwloop_steps=3, hwloop_corruption="tedrop")
+    assert FlowConfig.from_json(cfg.to_json()) == cfg

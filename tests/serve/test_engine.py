@@ -186,3 +186,34 @@ def test_stats_split_prefill_vs_decode(dense):
     # telemetry present: TTFT per request, per-slot occupancy
     assert len(stats.ttft_s) == len(reqs)
     assert len(stats.occupancy()) == 2
+
+
+def test_stats_to_dict_json_schema(dense):
+    """The serialized telemetry must carry the derived quantities (model
+    steps, per-slot occupancy, mean TTFT) and the hwloop fields, and be
+    plain-JSON serializable."""
+    import json
+
+    cfg, api, params = dense
+    eng = ServeEngine(cfg, params, slots=2, max_len=32)
+    for r in _requests():
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    d = stats.to_dict()
+    expected = {
+        # raw counters
+        "prefill_steps", "decode_steps", "waves", "admitted", "completed",
+        "truncated", "unserved", "tokens_generated", "slot_busy_steps",
+        "ttft_s",
+        # derived values (not just the raw dataclass fields)
+        "model_steps", "occupancy", "ttft_mean_s",
+        # hardware-in-the-loop telemetry (None/empty without a session)
+        "hwloop_step_flags", "hwloop",
+    }
+    assert expected <= set(d)
+    assert d["model_steps"] == d["prefill_steps"] + d["decode_steps"]
+    assert d["occupancy"] == stats.occupancy()
+    assert d["ttft_mean_s"] == pytest.approx(
+        sum(stats.ttft_s) / len(stats.ttft_s))
+    assert d["hwloop"] is None and d["hwloop_step_flags"] == []
+    json.dumps(d)          # plain-JSON serializable, end to end
