@@ -28,6 +28,40 @@ import numpy as np
 #: Output routing for JSON artifacts, set by main() from --out-dir/--json-out.
 _OUT: Dict[str, Optional[str]] = {"dir": ".", "json_out": None}
 
+#: The shared BENCH_*.json envelope: every JSON-writing scenario emits these
+#: top-level keys with identical semantics, and scenario-specific ``config``
+#: blocks reuse the same key names for the same concepts (``arch``,
+#: ``requests``, ``slots``, ``max_len``, ``array_n``, ``seed``, ...).
+BENCH_SCHEMA_KEYS: Tuple[str, ...] = ("scenario", "elapsed_s", "config")
+
+
+def validate_bench_payload(payload: Dict) -> None:
+    """Assert the shared BENCH_*.json schema (tests/benchmarks pins this)."""
+    for key in BENCH_SCHEMA_KEYS:
+        if key not in payload:
+            raise ValueError(f"BENCH payload missing {key!r}; has "
+                             f"{sorted(payload)}")
+    if not isinstance(payload["scenario"], str) or not payload["scenario"]:
+        raise ValueError(f"scenario must be a non-empty string, got "
+                         f"{payload['scenario']!r}")
+    elapsed = payload["elapsed_s"]
+    if not isinstance(elapsed, (int, float)) or not np.isfinite(elapsed) \
+            or elapsed < 0:
+        raise ValueError(f"elapsed_s must be a finite non-negative number, "
+                         f"got {elapsed!r}")
+    if not isinstance(payload["config"], dict):
+        raise ValueError(f"config must be a dict, got "
+                         f"{type(payload['config']).__name__}")
+
+
+def bench_payload(scenario: str, elapsed_s: float, config: Dict,
+                  **extra) -> Dict:
+    """Build (and eagerly validate) a BENCH_*.json payload."""
+    payload = {"scenario": scenario, "elapsed_s": float(elapsed_s),
+               "config": dict(config), **extra}
+    validate_bench_payload(payload)
+    return payload
+
 
 def _json_path(default_name: str) -> str:
     """Where a benchmark's JSON artifact goes (honours --out-dir/--json-out)."""
@@ -217,22 +251,23 @@ def bench_flow(fast: bool) -> List[Tuple[str, float, str]]:
         for a, b in zip(rv.reports, rr.reports))
     speedup = runs["reference"]["wall_s"] / runs["vectorized"]["wall_s"]
 
-    payload = {
-        "grid": {**{k: v for k, v in grid.items()}, **base},
-        "configs": len(rv.configs),
-        "repeats": repeats,
-        "vectorized": {k: v for k, v in runs["vectorized"].items()
-                       if k != "result"},
-        "reference": {k: v for k, v in runs["reference"].items()
-                      if k != "result"},
-        "speedup": speedup,
-        "bit_identical_reports": bool(identical),
-        "best_runtime_reduction_pct": rv.best()["runtime_reduction_pct"],
-        "notes": "reference = loop clustering/simulator/power-fit oracles "
-                 "with prefix-only caching (seed behaviour); vectorized = "
-                 "array hot paths + content-addressed cluster/floorplan "
-                 "sharing. Reports are bit-identical across the two.",
-    }
+    payload = bench_payload(
+        "flow",
+        runs["vectorized"]["wall_s"] + runs["reference"]["wall_s"],
+        {**grid, **base, "repeats": repeats},
+        configs=len(rv.configs),
+        vectorized={k: v for k, v in runs["vectorized"].items()
+                    if k != "result"},
+        reference={k: v for k, v in runs["reference"].items()
+                   if k != "result"},
+        speedup=speedup,
+        bit_identical_reports=bool(identical),
+        best_runtime_reduction_pct=rv.best()["runtime_reduction_pct"],
+        notes="reference = loop clustering/simulator/power-fit oracles "
+              "with prefix-only caching (seed behaviour); vectorized = "
+              "array hot paths + content-addressed cluster/floorplan "
+              "sharing. Reports are bit-identical across the two.",
+    )
     with open(_json_path("BENCH_flow.json"), "w") as f:
         json.dump(payload, f, indent=2)
     return [
@@ -353,8 +388,7 @@ def bench_serve(fast: bool) -> List[Tuple[str, float, str]]:
                         max_new_tokens=int(rng.integers(2, 8)))
                 for uid in range(n_req)]
 
-    rows, payload = [], {"arch": cfg.name, "requests": n_req, "slots": 2,
-                         "max_len": 48}
+    rows, engines = [], {}
     for name, engine_cls in (("continuous", ServeEngine),
                              ("wave", WaveServeEngine)):
         rng = np.random.default_rng(0)          # identical request sets
@@ -366,13 +400,17 @@ def bench_serve(fast: bool) -> List[Tuple[str, float, str]]:
             return eng.run_until_drained()
 
         us, stats = _time_us(serve, repeats=1)
-        payload[name] = {"us_per_call": us, **stats.to_dict()}
+        engines[name] = {"us_per_call": us, **stats.to_dict()}
         rows.append((f"serve/{name}_{n_req}req", us,
                      f"model_steps={stats.model_steps}"
                      f"_tok_per_s={stats.tokens_generated / (us / 1e6):.1f}"))
-    saved = 1 - payload["continuous"]["model_steps"] \
-        / max(payload["wave"]["model_steps"], 1)
-    payload["model_steps_saved_frac"] = saved
+    saved = 1 - engines["continuous"]["model_steps"] \
+        / max(engines["wave"]["model_steps"], 1)
+    payload = bench_payload(
+        "serve",
+        sum(e["us_per_call"] for e in engines.values()) / 1e6,
+        {"arch": cfg.name, "requests": n_req, "slots": 2, "max_len": 48},
+        **engines, model_steps_saved_frac=saved)
     with open(_json_path("BENCH_serve.json"), "w") as f:
         json.dump(payload, f, indent=2)
     rows.append(("serve/steps_saved", 0.0, f"saved_frac={saved:.2f}"))
@@ -397,8 +435,7 @@ def bench_hwloop(fast: bool) -> List[Tuple[str, float, str]]:
     fcfg = FlowConfig(array_n=8, tech="vtr-22nm", max_trials=8, seed=2021)
     n_req = 3 if fast else 6
     rows: List[Tuple[str, float, str]] = []
-    payload: Dict = {"flow_config": fcfg.to_dict(), "slots": 2,
-                     "requests": n_req, "serve": {}}
+    serve_payload: Dict = {}
     # one flow-artifact store shared by every session construction, so the
     # warmup and timed invocations both cache-hit the CAD-flow prefix
     store = ArtifactStore()
@@ -425,7 +462,7 @@ def bench_hwloop(fast: bool) -> List[Tuple[str, float, str]]:
 
         us, stats = _time_us(serve, repeats=1)
         tok_per_s = stats.tokens_generated / (us / 1e6)
-        payload["serve"][name] = {
+        serve_payload[name] = {
             "us_per_call": us, "tok_per_s": tok_per_s,
             "model_steps": stats.model_steps,
             "telemetry": stats.hwloop,
@@ -436,9 +473,9 @@ def bench_hwloop(fast: bool) -> List[Tuple[str, float, str]]:
             derived += (f"_energy_per_tok="
                         f"{stats.hwloop['energy_per_token_j']:.3g}J")
         rows.append((f"hwloop/serve_{name}_{n_req}req", us, derived))
-    payload["emulation_overhead_pct"] = 100.0 * (
-        payload["serve"]["ideal"]["tok_per_s"]
-        / max(payload["serve"]["hwloop"]["tok_per_s"], 1e-9) - 1.0)
+    overhead_pct = 100.0 * (
+        serve_payload["ideal"]["tok_per_s"]
+        / max(serve_payload["hwloop"]["tok_per_s"], 1e-9) - 1.0)
 
     # energy/token vs replay-rate across rail operating points: the same
     # calibrated design, rails scaled into (and past) the failure region
@@ -466,7 +503,13 @@ def bench_hwloop(fast: bool) -> List[Tuple[str, float, str]]:
                      f"energy_per_tok={led.energy_per_token_j:.3g}J"
                      f"_replay_rate={led.replay_rate:.2e}"
                      f"_rel_err={float(np.mean(rel)):.2e}"))
-    payload["operating_points"] = points
+    payload = bench_payload(
+        "hwloop",
+        sum(e["us_per_call"] for e in serve_payload.values()) / 1e6,
+        {"arch": mcfg.name, "requests": n_req, "slots": 2, "max_len": 48,
+         "flow": fcfg.to_dict()},
+        serve=serve_payload, emulation_overhead_pct=overhead_pct,
+        operating_points=points)
     with open(_json_path("BENCH_hwloop.json"), "w") as f:
         json.dump(payload, f, indent=2)
     return rows

@@ -1,20 +1,28 @@
-"""Hardware-in-the-loop quickstart: serve a smoke model on the emulated
-voltage-scaled accelerator, undervolt one rail mid-serve, and watch the
-Razor flags drive a live recalibration.
+"""Hardware-in-the-loop quickstart: serve a smoke model with ALL decode
+GEMMs on the emulated voltage-scaled accelerator, undervolt one rail
+mid-serve, and watch the real traffic's Razor flags drive a live
+recalibration.
 
     PYTHONPATH=src python examples/hwloop_serve.py [--arch starcoder2-3b]
+        [--backend emulated|probe]
 
-Walkthrough:
+Walkthrough (--backend emulated, the default):
   1. the CAD flow (repro.flow) calibrates per-partition rails for an 8x8
      array on vtr-22nm;
   2. an HwLoopSession wraps those rails in an EmulatedAccelerator and a
-     CalibrationWatchdog;
-  3. the continuous-batching ServeEngine decodes real requests with the
-     session attached — each decode step runs data-dependent probe traffic
-     through the emulated array and accounts energy per token;
+     CalibrationWatchdog, and an EmulatedBackend turns that same device
+     into the serving execution target;
+  3. the continuous-batching ServeEngine decodes real requests with
+     backend=emulated — every dense GEMM of every decode step runs on the
+     voltage-scaled array, with per-step flags and energy/token in
+     EngineStats; the session rides along as a thin watchdog adapter over
+     those real flags;
   4. we then undervolt partition 0 below its safe point and serve again:
-     DETECTED flags fire, the watchdog re-runs the cached
-     runtime_calibration stage, and the rails heal.
+     the REAL model traffic trips DETECTED flags, the watchdog re-runs the
+     cached runtime_calibration stage, and the rails heal.
+
+``--backend probe`` keeps the legacy side-channel mode: the engine decodes
+on the ideal path and the session emulates per-step probe traffic instead.
 """
 
 import argparse
@@ -22,6 +30,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro.backend import EmulatedBackend
 from repro.configs import ARCHS, get_config
 from repro.flow import FlowConfig
 from repro.hwloop import HwLoopSession
@@ -30,6 +39,11 @@ from repro.serve import Request, ServeEngine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="starcoder2-3b", choices=sorted(ARCHS))
+ap.add_argument("--backend", default="emulated",
+                choices=("emulated", "probe"),
+                help="emulated: serve all decode GEMMs on the "
+                     "voltage-scaled array; probe: legacy probe-traffic "
+                     "side channel")
 ap.add_argument("--requests", type=int, default=4)
 ap.add_argument("--max-new", type=int, default=5)
 args = ap.parse_args()
@@ -42,9 +56,15 @@ flow_cfg = FlowConfig(array_n=8, tech="vtr-22nm", max_trials=12, seed=2021)
 session = HwLoopSession(flow_cfg, probe_rows=8, rail_margin=0.02, patience=2)
 print(f"calibrated rails: {np.round(session.rails, 3).tolist()}")
 
+# the session's calibrated device doubles as the serving backend: real
+# decode GEMMs and watchdog healing share one set of rails
+backend = EmulatedBackend(session.accel) if args.backend == "emulated" \
+    else None
+
 
 def serve_batch(tag):
-    engine = ServeEngine(cfg, params, slots=2, max_len=48, hwloop=session)
+    engine = ServeEngine(cfg, params, slots=2, max_len=48,
+                         hwloop=session, backend=backend)
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
         engine.submit(Request(
@@ -55,16 +75,22 @@ def serve_batch(tag):
     hw = stats.hwloop
     rates = ", ".join(f"{x:.2f}" for x in hw["flag_rate"])
     e = hw["energy_per_token_j"]            # None when no decode step ran
-    print(f"[{tag}] {stats.tokens_generated} tokens, flag rates [{rates}], "
-          f"{hw['recalibrations']} recalibrations, "
-          f"{'n/a' if e is None else f'{e:.3g}'} J/token, "
-          f"replay rate {hw['replay_rate']:.2e}")
+    line = (f"[{tag}] {stats.tokens_generated} tokens, flag rates [{rates}], "
+            f"{hw['recalibrations']} recalibrations, "
+            f"{'n/a' if e is None else f'{e:.3g}'} J/token, "
+            f"replay rate {hw['replay_rate']:.2e}")
+    if stats.backend_telemetry:
+        bt = stats.backend_telemetry
+        line += (f" | backend:{stats.backend} {bt['calls']} GEMMs, "
+                 f"{bt['macs']} MACs, {bt['flags']} flags")
+    print(line)
 
 
 serve_batch("calibrated")
 
-# undervolt partition 0 below its safe point: flags fire, the watchdog
-# re-runs the (cached-prefix) calibration and restores safe rails mid-serve
+# undervolt partition 0 below its safe point: the serving traffic's own
+# flags fire, the watchdog re-runs the (cached-prefix) calibration and
+# restores safe rails mid-serve
 v_safe = float(session.accel.timing.min_safe_voltage()
                [session.accel._part_grid == 0].max())
 session.set_partition_voltage(0, v_safe - 0.02)

@@ -1,0 +1,33 @@
+"""repro.backend — one execution-backend protocol over ideal / reference /
+simulated / emulated voltage-scaled arrays.
+
+Quickstart::
+
+    from repro import backend
+
+    be = backend.get_backend("emulated")          # nominal-rail array
+    out, tel = be.matmul(a, b)                    # telemetry per call
+
+    with backend.use_backend(be):                 # scope model GEMMs
+        logits, state = api.decode_step(params, state, tokens)
+    print(be.summary()["energy_per_token_j"])
+
+The serve engine threads this end to end: ``ServeEngine(cfg, params,
+backend="emulated")`` (or ``launch.serve --backend emulated``) runs every
+decode GEMM on the fault-injecting :class:`EmulatedBackend` and surfaces
+per-step flag/replay/energy telemetry in ``EngineStats``.
+"""
+
+from .base import (PRECISIONS, BackendTelemetry, MatmulBackend,
+                   available_backends, current_backend, get_backend, matmul,
+                   quantize_sym_i8, register_backend, set_default,
+                   use_backend)
+from .impls import (EmulatedBackend, IdealBackend, ReferenceBackend,
+                    SimulatedBackend)
+
+__all__ = [
+    "PRECISIONS", "BackendTelemetry", "MatmulBackend", "available_backends",
+    "current_backend", "get_backend", "matmul", "quantize_sym_i8",
+    "register_backend", "set_default", "use_backend",
+    "IdealBackend", "ReferenceBackend", "SimulatedBackend", "EmulatedBackend",
+]

@@ -1,0 +1,370 @@
+"""The `repro.backend` execution protocol: one matmul contract over every
+fidelity level of the voltage-scaled array.
+
+The repo grew four divergent matmul execution paths — compiled Pallas
+kernels, the `kernels/ref.py` oracles, `core.SystolicSim`, and
+`hwloop.EmulatedAccelerator` — each with its own calling convention, so the
+DNN stack could only reach the voltage-scaled array through hwloop's
+bolt-on probe traffic.  :class:`MatmulBackend` unifies them:
+
+    out, telemetry = backend.matmul(a, b, precision="f32", count_flags=True)
+
+with a string-keyed registry (``get_backend("emulated")``) and a
+context-manager / ``set_default`` scoping API, so the *same* model code runs
+its GEMMs on the ideal compiled path, the jnp oracles, the cycle-level
+simulator, or the fault-injecting emulated accelerator — selectable per
+serve engine, per flow stage, or per ``with use_backend(...)`` block.
+
+Contract highlights (the parity tests in ``tests/backend`` pin these down):
+
+* ``precision=None`` (native) keeps the inputs' promoted dtype;
+  ``precision="f32"`` computes/returns float32; ``precision="int8"``
+  quantizes both operands through the **shared** host quantizer below, runs
+  the exact integer product on the backend, and dequantizes in shared
+  float32 code — so the int8 path is bit-identical across backends by
+  construction.
+* At nominal rails every backend computes the exact product: ``ideal``,
+  ``reference``, ``simulated`` and nominal-rail ``emulated`` are
+  bit-identical on reduction-order-independent inputs, and telemetry shows
+  zero flags / replays / silent failures.
+* :func:`matmul` (the model-facing router) is trace-safe: the ideal backend
+  lowers to a plain XLA dot; every other backend crosses to the host via
+  ``jax.pure_callback`` and accumulates its telemetry there, so jitted
+  decode steps can run all their GEMMs on the emulated array.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Precision tiers of the protocol.  ``None`` means "native" (keep the
+#: inputs' promoted dtype).
+PRECISIONS: Tuple[Optional[str], ...] = (None, "f32", "int8")
+
+
+# ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BackendTelemetry:
+    """Observables of one (or an accumulation of) backend matmul call(s).
+
+    ``flags`` counts partitions whose Razor flag fired (summed over calls);
+    ``partition_flags`` is the per-partition OR across the accumulated calls
+    (``None`` for backends without a partition notion).  ``energy_j`` is the
+    emulated accelerator's ledger delta (0.0 elsewhere).
+    """
+
+    calls: int = 0
+    macs: int = 0
+    flags: int = 0
+    replays: int = 0
+    silent: int = 0
+    energy_j: float = 0.0
+    rel_error: float = 0.0          # max over the accumulated calls
+    partition_flags: Optional[List[bool]] = None
+
+    def merge(self, other: "BackendTelemetry") -> None:
+        self.calls += other.calls
+        self.macs += other.macs
+        self.flags += other.flags
+        self.replays += other.replays
+        self.silent += other.silent
+        self.energy_j += other.energy_j
+        self.rel_error = max(self.rel_error, other.rel_error)
+        if other.partition_flags is not None:
+            if self.partition_flags is None:
+                self.partition_flags = [bool(f) for f in other.partition_flags]
+            else:
+                self.partition_flags = [
+                    bool(a or b) for a, b in
+                    zip(self.partition_flags, other.partition_flags)]
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-JSON snapshot (every value a python scalar/list)."""
+        return {
+            "calls": int(self.calls), "macs": int(self.macs),
+            "flags": int(self.flags), "replays": int(self.replays),
+            "silent": int(self.silent), "energy_j": float(self.energy_j),
+            "rel_error": float(self.rel_error),
+            "partition_flags": (None if self.partition_flags is None
+                                else [bool(f) for f in self.partition_flags]),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Shared int8 path (host-side, one definition for every backend)
+# ---------------------------------------------------------------------------
+
+
+def quantize_sym_i8(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-row int8 quantization, float32 throughout.
+
+    Mirrors ``kernels.ref.quantize_sym_i8`` but runs on the host so all four
+    backends share one bit-exact quantizer (the int8 parity guarantee).
+    """
+    xf = np.asarray(x, dtype=np.float32)
+    amax = np.max(np.abs(xf), axis=-1, keepdims=True)
+    scale = (np.maximum(amax, np.float32(1e-12)) / np.float32(127.0)) \
+        .astype(np.float32)
+    q = np.clip(np.round(xf / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def _out_dtype(a_dtype, b_dtype, precision: Optional[str]):
+    if precision == "f32":
+        return np.dtype(np.float32)
+    res = jnp.result_type(a_dtype, b_dtype)
+    if not jnp.issubdtype(res, jnp.floating):
+        return np.dtype(np.float32)      # exact accumulation of int inputs
+    return np.dtype(res)
+
+
+# ---------------------------------------------------------------------------
+# Protocol
+# ---------------------------------------------------------------------------
+
+
+class MatmulBackend:
+    """Base class of the execution-backend protocol.
+
+    Subclasses implement :meth:`_execute` — the exact-semantics host matmul
+    (plus whatever fault injection their fidelity level models) — and the
+    base class supplies the precision pipeline, telemetry accumulation and
+    the traced-routing entry point.
+    """
+
+    name: str = "backend"
+    #: The ideal backend routes as a native XLA dot (zero overhead); every
+    #: other backend crosses to the host per GEMM.
+    is_ideal: bool = False
+
+    def __init__(self) -> None:
+        self.total = BackendTelemetry()
+        self._pending = BackendTelemetry()
+
+    # -- subclass hook --------------------------------------------------------
+
+    def _execute(self, a: np.ndarray, b: np.ndarray
+                 ) -> Tuple[np.ndarray, BackendTelemetry]:
+        """Exact-product (M, K) @ (K, N) on this backend's machinery.
+
+        Receives host arrays; returns the (possibly fault-injected) product
+        in the backend's working precision plus single-call telemetry."""
+        raise NotImplementedError
+
+    # -- the protocol ---------------------------------------------------------
+
+    def matmul(self, a, b, *, precision: Optional[str] = None,
+               count_flags: bool = True
+               ) -> Tuple[np.ndarray, BackendTelemetry]:
+        """Execute ``a @ b`` at the given precision tier.
+
+        Host-side entry point (concrete arrays); traced callers go through
+        :func:`matmul` / :meth:`traced_matmul`.  Telemetry is returned AND
+        accumulated on the backend (``pop_telemetry`` drains it)."""
+        a_np, b_np = np.asarray(a), np.asarray(b)
+        if a_np.ndim != 2 or b_np.ndim != 2 or a_np.shape[1] != b_np.shape[0]:
+            raise ValueError(
+                f"matmul expects (M, K) @ (K, N); got {a_np.shape} @ "
+                f"{b_np.shape}")
+        if precision not in PRECISIONS:
+            raise ValueError(f"unknown precision {precision!r}; "
+                             f"known: {PRECISIONS}")
+        out_dtype = _out_dtype(a_np.dtype, b_np.dtype, precision)
+        if precision == "int8":
+            qa, sa = quantize_sym_i8(a_np)
+            qb, sb = quantize_sym_i8(b_np.T)          # per-column scales of b
+            prod, tel = self._execute(qa.astype(np.float32),
+                                      qb.T.astype(np.float32))
+            # shared float32 dequant: bit-identical across backends given the
+            # exact integer product each backend guarantees
+            out = (np.asarray(prod, dtype=np.float32) * sa * sb.T) \
+                .astype(np.float32)
+        else:
+            raw, tel = self._execute(a_np, b_np)
+            out = np.asarray(raw).astype(out_dtype)
+        if not count_flags:
+            tel = dataclasses.replace(tel, flags=0, partition_flags=None)
+        self._record(tel)
+        return out, tel
+
+    # -- traced routing -------------------------------------------------------
+
+    def traced_matmul(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """``a @ b`` routed through this backend from (possibly) traced code.
+
+        Crosses to the host with ``jax.pure_callback`` — the result feeds the
+        model graph, so the callback (and its telemetry side effects) runs
+        exactly when the computation does, including inside ``lax.scan`` over
+        layers and under ``jax.jit``.
+
+        Differentiable with **ideal-path gradients** (a custom VJP): the
+        forward product carries this backend's fault injection while the
+        backward pass uses exact XLA dots — the standard straight-through
+        treatment for training through injected hardware faults (pure
+        callbacks define no JVP of their own).
+        """
+        out_dtype = _out_dtype(a.dtype, b.dtype, None)
+        m, n = a.shape[0], b.shape[1]
+
+        def host(a_h, b_h):
+            out, _ = self.matmul(a_h, b_h)
+            return np.asarray(out, dtype=out_dtype)
+
+        @jax.custom_vjp
+        def routed(a, b):
+            return jax.pure_callback(
+                host, jax.ShapeDtypeStruct((m, n), out_dtype), a, b)
+
+        def routed_fwd(a, b):
+            return routed(a, b), (a, b)
+
+        def routed_bwd(res, g):
+            a, b = res
+            return ((g @ b.T).astype(a.dtype), (a.T @ g).astype(b.dtype))
+
+        routed.defvjp(routed_fwd, routed_bwd)
+        return routed(a, b)
+
+    # -- telemetry ------------------------------------------------------------
+
+    def _record(self, tel: BackendTelemetry) -> None:
+        self.total.merge(tel)
+        self._pending.merge(tel)
+
+    def pop_telemetry(self) -> BackendTelemetry:
+        """Drain the telemetry accumulated since the last pop (the serve
+        engine's per-decode-step payload); totals keep everything."""
+        out, self._pending = self._pending, BackendTelemetry()
+        return out
+
+    def add_tokens(self, n: int) -> None:
+        """Attribute ``n`` served tokens to this backend's energy accounting
+        (a no-op unless the backend owns an :class:`EnergyLedger`)."""
+
+    def summary(self) -> Dict[str, Any]:
+        """Plain-JSON lifetime telemetry (EngineStats' backend payload)."""
+        return {"backend": self.name, **self.total.to_dict()}
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., MatmulBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[..., MatmulBackend]
+                     ) -> Callable[..., MatmulBackend]:
+    """Make a backend constructible by name via :func:`get_backend`."""
+    _REGISTRY[name] = factory
+    return factory
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_backend(spec: Any, **kw: Any) -> MatmulBackend:
+    """Resolve a backend: an instance passes through; a registered name is
+    constructed fresh with ``**kw`` forwarded to its factory."""
+    if isinstance(spec, MatmulBackend):
+        if kw:
+            raise ValueError("keyword options only apply when constructing "
+                             "a backend by name")
+        return spec
+    try:
+        factory = _REGISTRY[spec]
+    except (KeyError, TypeError):
+        raise KeyError(f"unknown backend {spec!r}; known: "
+                       f"{available_backends()}") from None
+    return factory(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Scoping: default + context manager
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Optional[MatmulBackend] = None      # lazily resolved to "ideal"
+_STACK: List[MatmulBackend] = []
+
+
+def current_backend() -> MatmulBackend:
+    """The backend model GEMMs route through right now."""
+    if _STACK:
+        return _STACK[-1]
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = get_backend("ideal")
+    return _DEFAULT
+
+
+def set_default(spec: Any, **kw: Any) -> MatmulBackend:
+    """Install the process-wide default backend (outside any
+    ``use_backend`` scope).  Returns the resolved instance."""
+    global _DEFAULT
+    _DEFAULT = get_backend(spec, **kw)
+    return _DEFAULT
+
+
+@contextlib.contextmanager
+def use_backend(spec: Any, **kw: Any):
+    """Scope the active backend: every :func:`matmul` (and hence every model
+    GEMM traced) inside the block routes through it.
+
+    The binding happens at TRACE time: a ``jax.jit`` cache entry keeps the
+    backend that was active when it was traced, so entering this scope does
+    not re-route shapes a jitted function already compiled under another
+    backend.  Hold one jit wrapper per backend (``ServeEngine`` constructs
+    its own per instance) or trace inside the scope."""
+    be = get_backend(spec, **kw)
+    _STACK.append(be)
+    try:
+        yield be
+    finally:
+        _STACK.pop()
+
+
+# ---------------------------------------------------------------------------
+# Model-facing router
+# ---------------------------------------------------------------------------
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Dense GEMM through the active backend.  ``a``: (..., K); ``b``: (K, N).
+
+    On the ideal backend this IS ``a @ b`` (bit-for-bit the established
+    model semantics, jit/grad/shard-transparent); any other backend receives
+    the flattened (M, K) problem via its host callback.
+    """
+    be = current_backend()
+    if be.is_ideal:
+        return a @ b
+    lead = a.shape[:-1]
+    out = be.traced_matmul(a.reshape((-1, a.shape[-1])), b)
+    return out.reshape(lead + (b.shape[-1],))
+
+
+def largest_common_block(m: int, n: int,
+                         prefs: Tuple[int, ...] = (128, 64, 32, 16, 8, 4, 2, 1)
+                         ) -> int:
+    """Largest preferred tile edge dividing both axes (reference backend's
+    flag-grid block)."""
+    g = math.gcd(m, n)
+    for b in prefs:
+        if g % b == 0:
+            return b
+    return 1

@@ -71,6 +71,12 @@ class FlowConfig:
     hwloop_steps: int = 8
     hwloop_rows: int = 32
     hwloop_corruption: str = "stale"
+    # execution backend (repro.backend registry) the hwloop stage runs its
+    # inference traffic on: "emulated" (default — the calibrated
+    # fault-injecting accelerator with energy accounting), "simulated"
+    # (cycle-level SystolicSim at the calibrated rails), or
+    # "ideal"/"reference" (exact baselines: zero flags, no energy model)
+    backend: str = "emulated"
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "algo",
@@ -111,6 +117,17 @@ class FlowConfig:
             raise ValueError("hwloop_steps must be positive")
         if self.hwloop_rows <= 0:
             raise ValueError("hwloop_rows must be positive")
+        if self.backend not in ("ideal", "reference", "simulated", "emulated"):
+            # user backends registered in repro.backend are accepted too;
+            # the import is deferred (repro.backend is a heavier package)
+            try:
+                from ..backend import available_backends
+                known = available_backends()
+            except ImportError:  # pragma: no cover - mid-import edge only
+                known = ["ideal", "reference", "simulated", "emulated"]
+            if self.backend not in known:
+                raise ValueError(f"unknown backend {self.backend!r}; "
+                                 f"known: {known}")
         if self.hwloop_corruption not in ("stale", "tedrop", "bitflip"):
             # beyond the built-ins, accept anything in the repro.hwloop
             # registry (user models added via register_corruption).  The

@@ -337,11 +337,17 @@ class ConstraintsStage(Stage):
 
 @register_stage
 class HwLoopStage(Stage):
-    """Hardware-in-the-loop emulation (repro.hwloop): execute probe inference
-    traffic on the calibrated voltage islands with Razor fault injection and
-    an energy ledger, yielding the voltage→(accuracy-proxy, energy/token,
+    """Hardware-in-the-loop emulation: execute probe inference traffic on
+    the calibrated voltage islands through the ``repro.backend`` execution
+    protocol, yielding the voltage→(accuracy-proxy, energy/token,
     replay-rate) observables that close the loop between the CAD flow and
     real inference.
+
+    ``cfg.backend`` selects the execution target: ``"emulated"`` (default)
+    is the fault-injecting accelerator with the energy ledger;
+    ``"simulated"`` runs the cycle-level :class:`SystolicSim` at the same
+    calibrated rails (flags/silent observables, no energy model);
+    ``"ideal"``/``"reference"`` are the exact baselines (zero flags).
 
     Opt-in: not part of :data:`DEFAULT_STAGE_NAMES`; insert it after
     ``power`` (``repro.hwloop.hwloop_pipeline()`` does exactly that) so
@@ -355,18 +361,29 @@ class HwLoopStage(Stage):
                 "hwloop_silent_rate", "hwloop_rel_error")
     config_keys = ("array_n", "tech", "clock_ns", "freq_mhz", "activity",
                    "seed", "calibration_seed", "hwloop_steps", "hwloop_rows",
-                   "hwloop_corruption")
+                   "hwloop_corruption", "backend")
+
+    def _backend(self, art: Artifacts, cfg: FlowConfig):
+        # imported lazily: repro.backend's emulated impl reaches into
+        # repro.hwloop, which imports repro.flow at package level
+        from ..backend import get_backend
+        from ..backend.impls import EmulatedBackend, SimulatedBackend
+        if cfg.backend == "emulated":
+            from ..hwloop.device import EmulatedAccelerator
+            return EmulatedBackend(EmulatedAccelerator(
+                art.timing_model, art.floorplan_runtime,
+                razor=RazorConfig(clock_ns=cfg.clock_ns),
+                power=model_for(cfg.tech, freq_mhz=cfg.freq_mhz,
+                                activity=cfg.activity),
+                corruption=cfg.hwloop_corruption))
+        if cfg.backend == "simulated":
+            return SimulatedBackend(SystolicSim(
+                art.timing_model, art.floorplan_runtime,
+                RazorConfig(clock_ns=cfg.clock_ns)))
+        return get_backend(cfg.backend)
 
     def run(self, art: Artifacts, cfg: FlowConfig) -> Artifacts:
-        # imported lazily: repro.hwloop imports repro.flow at package level,
-        # so a module-scope import here would be circular
-        from ..hwloop.device import EmulatedAccelerator
-        accel = EmulatedAccelerator(
-            art.timing_model, art.floorplan_runtime,
-            razor=RazorConfig(clock_ns=cfg.clock_ns),
-            power=model_for(cfg.tech, freq_mhz=cfg.freq_mhz,
-                            activity=cfg.activity),
-            corruption=cfg.hwloop_corruption)
+        be = self._backend(art, cfg)
         rng = np.random.default_rng(cfg.resolved_calibration_seed() + 99_991)
         n = cfg.array_n
         flags = np.zeros(art.n_partitions, dtype=np.float64)
@@ -375,19 +392,23 @@ class HwLoopStage(Stage):
         for _ in range(cfg.hwloop_steps):
             a = rng.normal(size=(cfg.hwloop_rows, n))
             w = rng.normal(size=(n, n))
-            _, tel = accel.matmul(a, w)
-            flags += tel.partition_flags
-            silent += int(tel.silent_p.sum())
+            _, tel = be.matmul(a, w)
+            if tel.partition_flags is not None:
+                flags += np.asarray(tel.partition_flags, dtype=np.float64)
+            silent += tel.silent
             rel_errors.append(tel.rel_error)
-        # one probe step stands in for one served token
-        accel.ledger.add_tokens(cfg.hwloop_steps)
-        led = accel.ledger
+        be.add_tokens(cfg.hwloop_steps)  # one probe step ~ one served token
+        led = getattr(be, "ledger", None)
+        total_macs = max(be.total.macs, 1)
         return art.with_(
-            hwloop_energy_per_token_j=led.energy_per_token_j,
-            hwloop_energy_per_mac_j=led.energy_per_mac_j,
-            hwloop_replay_rate=led.replay_rate,
+            hwloop_energy_per_token_j=(led.energy_per_token_j
+                                       if led is not None else None),
+            hwloop_energy_per_mac_j=(led.energy_per_mac_j
+                                     if led is not None else None),
+            hwloop_replay_rate=(led.replay_rate if led is not None
+                                else be.total.replays / total_macs),
             hwloop_flag_rate=(flags / cfg.hwloop_steps).tolist(),
-            hwloop_silent_rate=silent / max(led.total_macs, 1),
+            hwloop_silent_rate=silent / total_macs,
             hwloop_rel_error=float(np.mean(rel_errors)))
 
 

@@ -93,6 +93,51 @@ class HwLoopSession:
         that restores safe rails."""
         self.accel.set_partition_voltage(partition, v)
 
+    # -- backend adapter -------------------------------------------------------
+
+    def attach_accelerator(self, accel) -> None:
+        """Bind the session to an external device — the serve engine's
+        ``EmulatedBackend`` accelerator.  The session then stops generating
+        probe traffic and instead acts as the watchdog adapter: real GEMM
+        flags arrive via :meth:`observe_flags` and rail heals land on the
+        live serving device (whose ledger also owns the energy accounting).
+
+        A *foreign* device (not the session's own accel) gets the session's
+        guarded calibrated rails applied — ``from_flow`` devices carry raw
+        Algorithm-2 rails, which sit at the edge of the clean region and
+        would trip spurious flags without the ``rail_margin`` band.
+        Re-attaching the session's own accel is a no-op, so deliberate rail
+        experiments (undervolting) survive engine reconstruction."""
+        if accel is self.accel:
+            return
+        if accel.n_partitions != self.n_partitions:
+            raise ValueError(
+                f"attached device has {accel.n_partitions} partitions; the "
+                f"session calibrated {self.n_partitions}")
+        self.accel = accel
+        accel.set_rails(self._guarded(np.asarray(self.watchdog.runtime_v)))
+
+    def observe_flags(self, flags, n_tokens: int = 0) -> bool:
+        """Feed one serving step's observed per-partition Razor flags into
+        the watchdog; returns True when a recalibration fired (fresh rails
+        are already swapped onto the attached device).  ``n_tokens`` > 0
+        additionally attributes tokens to the device's energy ledger (the
+        probe path does this; the backend adapter attributes its own)."""
+        flags = np.asarray(flags, dtype=bool)
+        if flags.shape != (self.n_partitions,):
+            raise ValueError(f"expected {self.n_partitions} partition flags, "
+                             f"got shape {flags.shape}")
+        if n_tokens:
+            self.accel.ledger.add_tokens(n_tokens)
+        self.flag_history.append(flags)
+        report = self.watchdog.observe(flags)
+        recalibrated = report is not None
+        if recalibrated:
+            self.recalibrations += 1
+            self.accel.set_rails(self._guarded(np.asarray(report.runtime_v)))
+        self.steps += 1
+        return recalibrated
+
     # -- the loop --------------------------------------------------------------
 
     def step(self, tokens: Sequence[int],
@@ -114,16 +159,8 @@ class HwLoopSession:
         a = rng.normal(size=(self.probe_rows, n))
         w = rng.normal(size=(n, n))
         _, tel = self.accel.matmul(a, w)
-        self.accel.ledger.add_tokens(n_tokens)
-
         flags = np.asarray(tel.partition_flags, dtype=bool)
-        self.flag_history.append(flags)
-        report = self.watchdog.observe(flags)
-        recalibrated = report is not None
-        if recalibrated:
-            self.recalibrations += 1
-            self.accel.set_rails(self._guarded(np.asarray(report.runtime_v)))
-        self.steps += 1
+        recalibrated = self.observe_flags(flags, n_tokens=n_tokens)
         return StepTelemetry(flags=flags, detected_p=tel.detected_p,
                              silent_p=tel.silent_p, rel_error=tel.rel_error,
                              recalibrated=recalibrated)

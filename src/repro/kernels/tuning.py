@@ -20,6 +20,7 @@ Two decisions every kernel wrapper needs are centralized here:
 
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -39,9 +40,27 @@ BLOCK_TABLE: Dict[str, Tuple[int, ...]] = {
 CHUNK_TABLE: Tuple[int, ...] = (128, 64, 32, 16, 8)
 
 
+#: One-shot guard for the interpret-fallback warning below.
+_INTERPRET_WARNED = False
+
+
 def default_interpret() -> bool:
-    """Interpret Pallas kernels only where no compiled backend exists."""
-    return jax.default_backend() == "cpu"
+    """Interpret Pallas kernels only where no compiled backend exists.
+
+    The CPU fallback is announced once per process (via :mod:`warnings`):
+    interpret mode is correct but runs the kernels as a Python-level
+    emulator, so its timings must never be mistaken for compiled numbers.
+    """
+    global _INTERPRET_WARNED
+    on_cpu = jax.default_backend() == "cpu"
+    if on_cpu and not _INTERPRET_WARNED:
+        _INTERPRET_WARNED = True
+        warnings.warn(
+            "no compiled Pallas backend on the CPU platform: kernels fall "
+            "back to interpret mode (correct, but a Python-level emulator — "
+            "not representative of compiled TPU performance)",
+            RuntimeWarning, stacklevel=2)
+    return on_cpu
 
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:

@@ -15,11 +15,21 @@ Flags:
                                  exhaustion reports truncated/unserved counts
     --json-out PATH              dump full EngineStats telemetry as JSON
                                  (prefill/decode steps, TTFT, occupancy, ...)
-    --hwloop                     attach a repro.hwloop emulated accelerator
-                                 (continuous engine only): per-step Razor
-                                 flags + energy/token join the telemetry
+    --backend {ideal,reference,simulated,emulated}
+                                 execution backend for ALL model GEMMs
+                                 (continuous engine only).  "emulated" runs
+                                 the CAD flow first and serves every decode
+                                 matmul on the calibrated voltage-scaled
+                                 array — per-step Razor flags and
+                                 energy/token land in EngineStats
+    --hwloop                     attach a repro.hwloop session (continuous
+                                 engine only).  Without --backend emulated:
+                                 legacy probe traffic per decode step.  With
+                                 it: thin watchdog adapter over the real
+                                 GEMM flags (rails heal mid-serve)
     --hwloop-tech / --hwloop-array-n
-                                 the emulated array's operating point
+                                 operating point of the emulated array /
+                                 hwloop session
 """
 
 from __future__ import annotations
@@ -51,6 +61,8 @@ def main() -> None:
     ap.add_argument("--max-steps", type=int, default=10_000)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", type=str, default=None)
+    ap.add_argument("--backend", default="ideal",
+                    choices=("ideal", "reference", "simulated", "emulated"))
     ap.add_argument("--hwloop", action="store_true")
     ap.add_argument("--hwloop-tech", default="vtr-22nm")
     ap.add_argument("--hwloop-array-n", type=int, default=8)
@@ -61,15 +73,34 @@ def main() -> None:
     params = api.init_params(jax.random.PRNGKey(args.seed))
     engine_cls = ServeEngine if args.engine == "continuous" else WaveServeEngine
     engine_kw = {}
-    if args.hwloop:
+    fcfg, store = None, None
+    if args.backend != "ideal" or args.hwloop:
         if args.engine != "continuous":
-            ap.error("--hwloop requires the continuous engine")
-        from ..flow import FlowConfig
+            ap.error("--backend/--hwloop require the continuous engine")
+    if args.backend == "emulated" or args.hwloop:
+        # only these two paths run the CAD flow; one artifact store shared
+        # by the backend's flow run and the hwloop watchdog executes it once
+        from ..flow import ArtifactStore, FlowConfig
+        fcfg = FlowConfig(array_n=args.hwloop_array_n, tech=args.hwloop_tech,
+                          max_trials=8, seed=2021)
+        store = ArtifactStore()
+    if args.backend == "emulated":
+        # CAD flow -> calibrated rails -> the serving execution target
+        from ..backend import EmulatedBackend
+        from ..flow import run as flow_run
+        engine_kw["backend"] = EmulatedBackend.from_flow(
+            flow_run(fcfg, store=store), fcfg)
+    elif args.backend == "simulated":
+        from ..backend import get_backend
+        engine_kw["backend"] = get_backend(
+            args.backend, array_n=args.hwloop_array_n, tech=args.hwloop_tech)
+    elif args.backend != "ideal":
+        from ..backend import get_backend
+        engine_kw["backend"] = get_backend(args.backend)
+    if args.hwloop:
         from ..hwloop import HwLoopSession
-        engine_kw["hwloop"] = HwLoopSession(
-            FlowConfig(array_n=args.hwloop_array_n, tech=args.hwloop_tech,
-                       max_trials=8, seed=2021),
-            probe_rows=8, rail_margin=0.02)
+        engine_kw["hwloop"] = HwLoopSession(fcfg, probe_rows=8,
+                                            rail_margin=0.02, store=store)
     engine = engine_cls(cfg, params, slots=args.slots, max_len=args.max_len,
                         **engine_kw)
 
@@ -99,6 +130,13 @@ def main() -> None:
     for r in reqs[:3]:
         print(f"  req {r.uid}: prompt {r.prompt} -> {r.out_tokens}"
               f"{' (truncated)' if r.truncated else ''}")
+    if stats.backend_telemetry:
+        bt = stats.backend_telemetry
+        e = bt.get("energy_per_token_j")
+        print(f"[backend:{stats.backend}] {bt['calls']} GEMMs, "
+              f"{bt['macs']} MACs, {bt['flags']} flags, "
+              f"{bt['replays']} replays, "
+              f"{'n/a' if e is None else f'{e:.3g}'} J/token")
     if stats.hwloop:
         hw = stats.hwloop
         rates = ", ".join(f"{x:.2f}" for x in hw["flag_rate"])

@@ -15,6 +15,7 @@
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -52,6 +53,28 @@ def _token_batch(b: int, s: int, with_labels: bool) -> Dict[str, BatchSpec]:
 @dataclasses.dataclass
 class ModelAPI:
     cfg: ModelConfig
+    #: Execution backend for the model's dense GEMMs (a ``repro.backend``
+    #: name or instance); ``None`` keeps the surrounding scope's backend
+    #: (usually the zero-overhead ``ideal`` XLA path).
+    backend: Any = None
+
+    def __post_init__(self) -> None:
+        if self.backend is not None:
+            # resolve a name to ONE instance up front: per-call resolution
+            # would rebuild the device every step and strand its telemetry
+            from ..backend import get_backend
+            self.backend = get_backend(self.backend)
+
+    def _scope(self):
+        """Active-backend scope for model steps.
+
+        Entered per call so any (re)trace sees this API's backend.  Routing
+        binds at trace time: jit wrappers must not be shared across APIs
+        with different backends (each ``ServeEngine`` builds its own)."""
+        if self.backend is None:
+            return contextlib.nullcontext()
+        from ..backend import use_backend
+        return use_backend(self.backend)
 
     # ---- params --------------------------------------------------------------
 
@@ -74,37 +97,40 @@ class ModelAPI:
 
     def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
         f = self.cfg.family
-        if f in ("dense", "moe", "vlm"):
-            return lm.loss_fn(params, batch, self.cfg)
-        if f == "ssm":
-            return ssm.rwkv6_loss(params, batch, self.cfg)
-        if f == "hybrid":
-            return ssm.zamba2_loss(params, batch, self.cfg)
-        if f == "encdec":
-            return encdec.loss_fn(params, batch, self.cfg)
+        with self._scope():
+            if f in ("dense", "moe", "vlm"):
+                return lm.loss_fn(params, batch, self.cfg)
+            if f == "ssm":
+                return ssm.rwkv6_loss(params, batch, self.cfg)
+            if f == "hybrid":
+                return ssm.zamba2_loss(params, batch, self.cfg)
+            if f == "encdec":
+                return encdec.loss_fn(params, batch, self.cfg)
         raise ValueError(f)
 
     def prefill(self, params: Params, batch: Dict[str, jax.Array],
                 max_len: Optional[int] = None):
         f = self.cfg.family
-        if f in ("dense", "moe", "vlm"):
-            return lm.prefill(params, batch, self.cfg, max_len)
-        if f == "encdec":
-            return encdec.prefill(params, batch, self.cfg, max_len)
+        with self._scope():
+            if f in ("dense", "moe", "vlm"):
+                return lm.prefill(params, batch, self.cfg, max_len)
+            if f == "encdec":
+                return encdec.prefill(params, batch, self.cfg, max_len)
         raise NotImplementedError(
             f"prefill for {f}: SSM/hybrid prompts are absorbed by running "
             "decode_step over the prompt (O(1) state)")
 
     def decode_step(self, params: Params, state: Params, tokens: jax.Array):
         f = self.cfg.family
-        if f in ("dense", "moe", "vlm"):
-            return lm.decode_step(params, state, tokens, self.cfg)
-        if f == "ssm":
-            return ssm.rwkv6_decode_step(params, state, tokens, self.cfg)
-        if f == "hybrid":
-            return ssm.zamba2_decode_step(params, state, tokens, self.cfg)
-        if f == "encdec":
-            return encdec.decode_step(params, state, tokens, self.cfg)
+        with self._scope():
+            if f in ("dense", "moe", "vlm"):
+                return lm.decode_step(params, state, tokens, self.cfg)
+            if f == "ssm":
+                return ssm.rwkv6_decode_step(params, state, tokens, self.cfg)
+            if f == "hybrid":
+                return ssm.zamba2_decode_step(params, state, tokens, self.cfg)
+            if f == "encdec":
+                return encdec.decode_step(params, state, tokens, self.cfg)
         raise ValueError(f)
 
     # ---- specs ---------------------------------------------------------------
@@ -198,5 +224,5 @@ class ModelAPI:
                             is_leaf=_is_spec)
 
 
-def model_api(cfg: ModelConfig) -> ModelAPI:
-    return ModelAPI(cfg)
+def model_api(cfg: ModelConfig, backend: Any = None) -> ModelAPI:
+    return ModelAPI(cfg, backend=backend)

@@ -13,6 +13,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..backend import matmul as bmm
 from ..configs.base import ModelConfig
 from .layers import (KVCacheSpec, _mask, _qkv, _repeat_kv, _sdpa, attention, scan_layers,
                      attention_param_specs, chunked_softmax_xent,
@@ -35,18 +36,18 @@ def cross_attention(x: jax.Array, mem_k: jax.Array, mem_v: jax.Array,
                     p: Params, cfg: ModelConfig) -> jax.Array:
     """x: (b, s, d) queries; mem_k/mem_v: (b, t, h_kv, dh) projected memory."""
     b, s, _ = x.shape
-    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    q = bmm(x, p["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
     k = _repeat_kv(mem_k, cfg.n_heads)
     v = _repeat_kv(mem_v, cfg.n_heads)
     keep = jnp.ones((s, k.shape[1]), bool)
     o = _sdpa(q, k, v, keep, cfg.d_head).reshape(b, s, cfg.q_dim)
-    return o @ p["wo"]
+    return bmm(o, p["wo"])
 
 
 def project_memory(mem: jax.Array, p: Params, cfg: ModelConfig):
     b, t, _ = mem.shape
-    k = (mem @ p["wk"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
-    v = (mem @ p["wv"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+    k = bmm(mem, p["wk"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+    v = bmm(mem, p["wv"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
     return k, v
 
 

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..backend import current_backend
+from ..backend import matmul as bmm
 from ..configs.base import ModelConfig
 from .shardlib import ParamSpec, current_rules, shard
 
@@ -113,9 +115,9 @@ def attention_param_specs(cfg: ModelConfig, layers: Optional[int] = None) -> Par
 
 def _qkv(x: jax.Array, p: Params, cfg: ModelConfig, positions: jax.Array):
     b, s, _ = x.shape
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    q = bmm(x, p["wq"])
+    k = bmm(x, p["wk"])
+    v = bmm(x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
@@ -231,7 +233,7 @@ def attention(x: jax.Array, p: Params, cfg: ModelConfig,
         o = jax.lax.map(one_chunk, jnp.arange(n_chunk))       # (n, b, ch, h, d)
         o = jnp.moveaxis(o, 0, 1).reshape(b, s, cfg.n_heads, cfg.d_head)
     o = o.reshape(b, s, cfg.q_dim)
-    out = o @ p["wo"]
+    out = bmm(o, p["wo"])
     if return_kv:
         return out, k_raw, v_raw
     return out
@@ -339,7 +341,7 @@ def decode_attention(x: jax.Array, p: Params, cfg: ModelConfig,
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     o = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, 1, cfg.q_dim)
-    return o @ p["wo"], new_kv
+    return bmm(o, p["wo"]), new_kv
 
 
 # ---------------------------------------------------------------------------
@@ -366,12 +368,12 @@ def mlp_param_specs(cfg: ModelConfig, layers: Optional[int] = None,
 
 def mlp(x: jax.Array, p: Params, cfg: ModelConfig) -> jax.Array:
     if cfg.act == "swiglu":
-        h = jax.nn.silu((x @ p["wg"]).astype(jnp.float32)).astype(x.dtype)
-        h = h * (x @ p["w1"])
+        h = jax.nn.silu(bmm(x, p["wg"]).astype(jnp.float32)).astype(x.dtype)
+        h = h * bmm(x, p["w1"])
     else:
-        h = jax.nn.gelu((x @ p["w1"]).astype(jnp.float32)).astype(x.dtype)
+        h = jax.nn.gelu(bmm(x, p["w1"]).astype(jnp.float32)).astype(x.dtype)
     h = shard(h, "batch", None, "tp")
-    return h @ p["w2"]
+    return bmm(h, p["w2"])
 
 
 # ---------------------------------------------------------------------------
@@ -405,7 +407,7 @@ def moe_param_specs(cfg: ModelConfig, layers: Optional[int] = None) -> Params:
 
 def _router(x: jax.Array, p: Params, cfg: ModelConfig):
     """Top-k routing. Returns (weights (t, k), indices (t, k)) over flat tokens."""
-    logits = (x.astype(jnp.float32) @ p["router"])            # (t, E)
+    logits = bmm(x.astype(jnp.float32), p["router"])          # (t, E)
     probs = jax.nn.softmax(logits, axis=-1)
     w, idx = jax.lax.top_k(probs, cfg.top_k)
     w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
@@ -425,14 +427,21 @@ def moe_dense(x: jax.Array, p: Params, cfg: ModelConfig) -> jax.Array:
     w, idx, _ = _router(xt, p, cfg)
     gates = jnp.zeros((t, cfg.n_experts), jnp.float32)
     gates = gates.at[jnp.arange(t)[:, None], idx].set(w)      # (t, E)
-    if cfg.act == "swiglu":
-        h = jax.nn.silu(jnp.einsum("td,edf->etf", xt, p["wg"]).astype(jnp.float32)
-                        ).astype(xt.dtype)
-        h = h * jnp.einsum("td,edf->etf", xt, p["w1"])
+    if current_backend().is_ideal:
+        up = lambda wkey: jnp.einsum("td,edf->etf", xt, p[wkey])
+        down = lambda h: jnp.einsum("etf,efd->etd", h, p["w2"])
     else:
-        h = jax.nn.gelu(jnp.einsum("td,edf->etf", xt, p["w1"]).astype(jnp.float32)
-                        ).astype(xt.dtype)
-    y = jnp.einsum("etf,efd->etd", h, p["w2"])                # (E, t, d)
+        # per-expert GEMMs through the active backend (E dense matmuls)
+        up = lambda wkey: jnp.stack(
+            [bmm(xt, p[wkey][e]) for e in range(cfg.n_experts)])
+        down = lambda h: jnp.stack(
+            [bmm(h[e], p["w2"][e]) for e in range(cfg.n_experts)])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(up("wg").astype(jnp.float32)).astype(xt.dtype)
+        h = h * up("w1")
+    else:
+        h = jax.nn.gelu(up("w1").astype(jnp.float32)).astype(xt.dtype)
+    y = down(h)                                               # (E, t, d)
     out = jnp.einsum("etd,te->td", y, gates.astype(y.dtype))
     return out.reshape(b, s, d)
 
@@ -489,11 +498,11 @@ def moe_ep_a2a(x: jax.Array, p: Params, cfg: ModelConfig) -> jax.Array:
         recv = recv.reshape(cfg.n_experts * cap, d)
         # resident expert FFN (weights arrive as (1, d, ff) shards)
         if cfg.act == "swiglu":
-            h = jax.nn.silu((recv @ wg[0]).astype(jnp.float32)).astype(recv.dtype)
-            h = h * (recv @ w1[0])
+            h = jax.nn.silu(bmm(recv, wg[0]).astype(jnp.float32)).astype(recv.dtype)
+            h = h * bmm(recv, w1[0])
         else:
-            h = jax.nn.gelu((recv @ w1[0]).astype(jnp.float32)).astype(recv.dtype)
-        y = h @ w2[0]
+            h = jax.nn.gelu(bmm(recv, w1[0]).astype(jnp.float32)).astype(recv.dtype)
+        y = bmm(h, w2[0])
         y = y.reshape(cfg.n_experts, cap, d)
         back = jax.lax.all_to_all(y, e_axis, split_axis=0, concat_axis=0,
                                   tiled=True).reshape(cfg.n_experts, cap, d)
@@ -558,7 +567,7 @@ def chunked_softmax_xent(x: jax.Array, emb: jax.Array, labels: jax.Array,
     def body(acc, ci):
         xc = jax.lax.dynamic_slice_in_dim(x, ci * ch, ch, axis=1)
         yc = jax.lax.dynamic_slice_in_dim(labels, ci * ch, ch, axis=1)
-        logits = (xc @ emb.T).astype(jnp.float32)              # (b, ch, V)
+        logits = bmm(xc, emb.T).astype(jnp.float32)            # (b, ch, V)
         logits = shard(logits, "batch", None, "tp")
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
@@ -577,5 +586,5 @@ def chunked_softmax_xent(x: jax.Array, emb: jax.Array, labels: jax.Array,
 
 def logits_last(x_last: jax.Array, emb: jax.Array) -> jax.Array:
     """(b, 1, d) -> (b, V) logits for decode."""
-    out = (x_last[:, 0] @ emb.T).astype(jnp.float32)
+    out = bmm(x_last[:, 0], emb.T).astype(jnp.float32)
     return shard(out, "batch", "tp")

@@ -4,6 +4,12 @@ starcoder2, phi4-mini).
 
 Layers are stacked on a leading L axis and driven by jax.lax.scan (compile
 time O(1 layer) — DESIGN.md Sec. 4); remat policy per block from cfg.remat.
+
+Every dense GEMM of this family (qkv/o projections, MLP, MoE experts,
+unembedding logits/loss) routes through the active ``repro.backend`` — the
+building blocks in :mod:`repro.models.layers` call ``backend.matmul``, so a
+``ServeEngine(backend="emulated")`` decode runs this model's matmuls on the
+voltage-scaled emulated array.
 """
 
 from __future__ import annotations

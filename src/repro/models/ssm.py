@@ -19,6 +19,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..backend import current_backend
+from ..backend import matmul as bmm
 from ..configs.base import ModelConfig
 from .layers import (attention, attention_param_specs, chunked_softmax_xent, scan_layers,
                      decode_attention, embed, embed_param_specs, logits_last,
@@ -104,7 +106,7 @@ def mamba2_forward(x: jax.Array, lp: Params, cfg: ModelConfig,
     """
     dims = mamba2_dims(cfg)
     b, s, _ = x.shape
-    zxbcdt = x @ lp["in_proj"]
+    zxbcdt = bmm(x, lp["in_proj"])
     z, xbc, dt = _split_zxbcdt(zxbcdt, dims)
     xbc = _causal_conv(xbc, lp["conv_w"], conv_state)
     xs, B, C = jnp.split(xbc, [dims["d_inner"],
@@ -160,14 +162,16 @@ def mamba2_forward(x: jax.Array, lp: Params, cfg: ModelConfig,
 
     gated = y * jax.nn.silu(z.astype(jnp.float32))
     gated = rmsnorm(gated.astype(jnp.bfloat16), lp["gate_norm"])
-    out = gated @ lp["out_proj"]
+    out = bmm(gated, lp["out_proj"])
     if return_state:
         conv_out = jnp.concatenate(
             [conv_state.astype(xbc.dtype) if conv_state is not None else
              jnp.zeros((b, 3, dims["conv_dim"]), xbc.dtype),
-             # pre-activation conv input tail: recompute from projections
-             (x @ lp["in_proj"])[:, :, dims["d_inner"]:dims["d_inner"] +
-                                 dims["conv_dim"]]], axis=1)[:, -3:]
+             # pre-activation conv input tail: slice the projection already
+             # computed above (a second bmm would re-run the GEMM on the
+             # host backend and double-count its MACs/energy)
+             zxbcdt[:, :, dims["d_inner"]:dims["d_inner"] +
+                    dims["conv_dim"]]], axis=1)[:, -3:]
         return out, R_final, conv_out
     return out
 
@@ -178,7 +182,7 @@ def mamba2_step(x: jax.Array, lp: Params, cfg: ModelConfig,
     conv_state: (b, 3, conv_dim) raw pre-conv inputs."""
     dims = mamba2_dims(cfg)
     b = x.shape[0]
-    zxbcdt = x @ lp["in_proj"]
+    zxbcdt = bmm(x, lp["in_proj"])
     z, xbc_new, dt = _split_zxbcdt(zxbcdt, dims)
     window = jnp.concatenate([conv_state.astype(xbc_new.dtype), xbc_new], axis=1)
     conv_w = lp["conv_w"]
@@ -198,7 +202,7 @@ def mamba2_step(x: jax.Array, lp: Params, cfg: ModelConfig,
     y = y.reshape(b, 1, dims["d_inner"])
     gated = y * jax.nn.silu(z.astype(jnp.float32))
     gated = rmsnorm(gated.astype(jnp.bfloat16), lp["gate_norm"])
-    out = gated @ lp["out_proj"]
+    out = bmm(gated, lp["out_proj"])
     return out, new_state, window[:, -3:]
 
 
@@ -319,10 +323,13 @@ def rwkv6_timemix(x, lp, cfg, state=None, prev=None, return_state=False):
         delta = xs - x
         W = jnp.stack([lp["wr"], lp["wk"], lp["wv"], lp["wg"]])   # (4, d, d)
         mu = lp["tmix_mu"][:4].astype(jnp.float32)                # (4, d)
-        base = jnp.einsum("bsd,idf->ibsf", x, W)
-        mixp = jnp.einsum("bsd,idf->ibsf", delta,
-                          (mu[:, :, None] * W.astype(jnp.float32)
-                           ).astype(W.dtype))
+        W_mix = (mu[:, :, None] * W.astype(jnp.float32)).astype(W.dtype)
+        if current_backend().is_ideal:
+            base = jnp.einsum("bsd,idf->ibsf", x, W)
+            mixp = jnp.einsum("bsd,idf->ibsf", delta, W_mix)
+        else:
+            base = jnp.stack([bmm(x, W[i]) for i in range(4)])
+            mixp = jnp.stack([bmm(delta, W_mix[i]) for i in range(4)])
         rkvg = base + mixp
         r, k, v, gg = (rkvg[i].astype(act) for i in range(4))
         r = r.reshape(b, s, dims["h"], dims["p"])
@@ -334,13 +341,14 @@ def rwkv6_timemix(x, lp, cfg, state=None, prev=None, return_state=False):
         mix = lambda i: (x + lp["tmix_mu"][i][None, None].astype(x.dtype)
                          * (xs - x))
         xr, xk, xv, xw, xg = (mix(i) for i in range(5))
-        r = (xr @ lp["wr"]).astype(act).reshape(b, s, dims["h"], dims["p"])
-        k = (xk @ lp["wk"]).astype(act).reshape(b, s, dims["h"], dims["p"])
-        v = (xv @ lp["wv"]).astype(act).reshape(b, s, dims["h"], dims["p"])
-        g = jax.nn.silu((xg @ lp["wg"]).astype(jnp.float32)).astype(act)
+        r = bmm(xr, lp["wr"]).astype(act).reshape(b, s, dims["h"], dims["p"])
+        k = bmm(xk, lp["wk"]).astype(act).reshape(b, s, dims["h"], dims["p"])
+        v = bmm(xv, lp["wv"]).astype(act).reshape(b, s, dims["h"], dims["p"])
+        g = jax.nn.silu(bmm(xg, lp["wg"]).astype(jnp.float32)).astype(act)
     w_log = -jnp.exp(lp["w_base"][None, None]
-                     + (jnp.tanh((xw @ lp["w_lora_a"]).astype(jnp.float32))
-                        @ lp["w_lora_b"].astype(jnp.float32)))
+                     + bmm(jnp.tanh(bmm(xw, lp["w_lora_a"])
+                                    .astype(jnp.float32)),
+                           lp["w_lora_b"].astype(jnp.float32)))
     w_log = w_log.reshape(b, s, dims["h"], dims["p"])
     S0 = (jnp.zeros((b, dims["h"], dims["p"], dims["p"]), jnp.float32)
           if state is None else state)
@@ -351,7 +359,7 @@ def rwkv6_timemix(x, lp, cfg, state=None, prev=None, return_state=False):
                         compute_dtype=act)
     y = y.reshape(b, s, d)
     y = rmsnorm(y.astype(jnp.bfloat16), lp["ln_x"]).astype(jnp.float32)
-    out = ((y * g.astype(jnp.float32)).astype(jnp.bfloat16)) @ lp["wo"]
+    out = bmm((y * g.astype(jnp.float32)).astype(jnp.bfloat16), lp["wo"])
     if return_state:
         return out, S, x[:, -1]
     return out
@@ -361,9 +369,9 @@ def rwkv6_channelmix(x, lp, prev=None, return_state=False):
     xs = _token_shift(x, prev)
     xk = x + lp["cmix_mu"][0][None, None].astype(x.dtype) * (xs - x)
     xr = x + lp["cmix_mu"][1][None, None].astype(x.dtype) * (xs - x)
-    k = jnp.square(jax.nn.relu((xk @ lp["ck"]).astype(jnp.float32)))
-    kv = k.astype(jnp.bfloat16) @ lp["cv"]
-    out = jax.nn.sigmoid((xr @ lp["cr"]).astype(jnp.float32)).astype(kv.dtype) * kv
+    k = jnp.square(jax.nn.relu(bmm(xk, lp["ck"]).astype(jnp.float32)))
+    kv = bmm(k.astype(jnp.bfloat16), lp["cv"])
+    out = jax.nn.sigmoid(bmm(xr, lp["cr"]).astype(jnp.float32)).astype(kv.dtype) * kv
     if return_state:
         return out, x[:, -1]
     return out
@@ -458,7 +466,7 @@ def _zamba_shared_block(x, emb0, sp, cfg):
     """Shared attention block: concat(hidden, first-layer embedding) ->
     down-projection -> attn -> mlp (zamba2 concat re-use trick)."""
     cat = jnp.concatenate([x, emb0], axis=-1)
-    h = cat @ sp["down"]
+    h = bmm(cat, sp["down"])
     a = rmsnorm(h, sp["norm_attn"])
     h = h + attention(a, sp["attn"], cfg, causal=True)
     a = rmsnorm(h, sp["norm_mlp"])
@@ -540,7 +548,7 @@ def zamba2_decode_step(params, state, tokens, cfg):
                                              collect=True)
         # shared attention with its per-application KV cache
         cat = jnp.concatenate([x, emb0], axis=-1)
-        h = cat @ sp["down"]
+        h = bmm(cat, sp["down"])
         a = rmsnorm(h, sp["norm_attn"])
         att, kv_new = decode_attention(a, sp["attn"], cfg, kv_l, index)
         h = h + att

@@ -22,6 +22,12 @@ per-request TTFT, per-slot occupancy, and honest completion accounting —
 requests cut short by the step budget or ``max_len`` are reported as
 ``truncated`` (never ``completed``), and requests still queued when the
 budget runs out are ``unserved``.
+
+``ServeEngine(backend=...)`` selects the ``repro.backend`` execution target
+for ALL model GEMMs: ``backend="emulated"`` serves every decode matmul on
+the fault-injecting voltage-scaled array, with per-step per-partition Razor
+flags (``backend_step_flags``) and the backend's lifetime flag/replay/energy
+summary (``backend_telemetry``) in ``EngineStats``.
 """
 
 from __future__ import annotations
@@ -63,6 +69,14 @@ class EngineStats:
     hwloop_step_flags: List[List[bool]] = dataclasses.field(
         default_factory=list)
     hwloop: Optional[Dict[str, Any]] = None
+    # execution-backend telemetry (continuous engine with a non-ideal
+    # repro.backend attached): the backend's name, per-decode-step
+    # per-partition Razor flags from the REAL model GEMMs, and the backend's
+    # lifetime summary (flags, replays, energy/token via its EnergyLedger)
+    backend: Optional[str] = None
+    backend_step_flags: List[List[bool]] = dataclasses.field(
+        default_factory=list)
+    backend_telemetry: Optional[Dict[str, Any]] = None
 
     @property
     def model_steps(self) -> int:
@@ -87,19 +101,35 @@ class ServeEngine:
     """Continuous-batching engine over a fixed number of decode slots."""
 
     def __init__(self, cfg: ModelConfig, params: Pytree, slots: int = 4,
-                 max_len: int = 128, hwloop=None):
+                 max_len: int = 128, hwloop=None, backend=None):
         self.cfg = cfg
-        self.api = model_api(cfg)
+        # execution backend for ALL model GEMMs (a repro.backend name or
+        # instance): "emulated" serves every decode matmul on the
+        # fault-injecting voltage-scaled array with flag/energy telemetry
+        if backend is not None:
+            from ..backend import get_backend
+            backend = get_backend(backend)
+        self.backend = backend
+        self._track_backend = backend is not None and not backend.is_ideal
+        self.api = model_api(cfg, backend=backend)
         self.params = params
         self.slots = slots
         self.max_len = max_len
         # optional repro.hwloop.HwLoopSession (duck-typed to avoid importing
-        # the hwloop package here): each decode step's emitted tokens drive
-        # one emulated accelerator step; its Razor flags and energy ledger
-        # surface in EngineStats
+        # the hwloop package here).  Legacy mode (no emulated backend): each
+        # decode step's emitted tokens drive one probe-traffic accelerator
+        # step.  With an emulated backend the session becomes a THIN ADAPTER:
+        # no probe traffic — the backend's real per-step GEMM flags feed its
+        # CalibrationWatchdog, and rail heals land on the serving device.
         self.hwloop = hwloop
+        self._hwloop_adapter = (hwloop is not None
+                                and hasattr(backend, "accel"))
+        if self._hwloop_adapter:
+            self.hwloop.attach_accelerator(backend.accel)
         self.scheduler = SlotScheduler(slots)
-        self.stats = EngineStats(slot_busy_steps=[0] * slots)
+        self.stats = EngineStats(
+            slot_busy_steps=[0] * slots,
+            backend=backend.name if backend is not None else None)
         self._shape = ShapeConfig("serve", max_len, slots, "decode")
         self._sub_shape = ShapeConfig("serve", max_len, 1, "decode")
         self._state = self.api.make_decode_state(self._shape)
@@ -225,6 +255,10 @@ class ServeEngine:
         used = self._admit(budget)
         if not self.scheduler.active or used >= budget:
             return used
+        if self._track_backend:
+            # prefill GEMM telemetry stays in the backend totals but must not
+            # pollute the next decode step's flag vector
+            self.backend.pop_telemetry()
         logits, self._state = self._step(self.params, self._state,
                                          jnp.asarray(self._cur[:, None]))
         self.stats.decode_steps += 1
@@ -237,10 +271,21 @@ class ServeEngine:
             self._emit(slot, req, tok)
             step_tokens.append(tok)
             self._maybe_finish(slot, req)
+        step_flags: Optional[List[bool]] = None
+        if self._track_backend:
+            tel = self.backend.pop_telemetry()   # this decode step's GEMMs
+            step_flags = [bool(f) for f in (tel.partition_flags or [])]
+            self.stats.backend_step_flags.append(step_flags)
+            self.backend.add_tokens(len(step_tokens))
         if self.hwloop is not None and step_tokens:
-            tel = self.hwloop.step(step_tokens, n_tokens=len(step_tokens))
-            self.stats.hwloop_step_flags.append(
-                [bool(f) for f in np.asarray(tel.flags)])
+            if self._hwloop_adapter:
+                # thin adapter: real GEMM flags -> watchdog -> rail heal
+                self.hwloop.observe_flags(step_flags or [])
+                self.stats.hwloop_step_flags.append(step_flags or [])
+            else:
+                tel = self.hwloop.step(step_tokens, n_tokens=len(step_tokens))
+                self.stats.hwloop_step_flags.append(
+                    [bool(f) for f in np.asarray(tel.flags)])
         return used
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
@@ -260,6 +305,8 @@ class ServeEngine:
         self.stats.unserved = self.scheduler.n_pending
         if self.hwloop is not None:
             self.stats.hwloop = self.hwloop.summary()
+        if self._track_backend:
+            self.stats.backend_telemetry = self.backend.summary()
         return self.stats
 
 

@@ -1,0 +1,153 @@
+"""repro.backend API: registry, scoping, and the traced model router."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backend as B
+
+
+def test_registry_constructs_all_first_class_backends():
+    assert set(B.available_backends()) >= {"ideal", "reference", "simulated",
+                                           "emulated"}
+    for name in ("ideal", "reference", "simulated", "emulated"):
+        be = B.get_backend(name)
+        assert isinstance(be, B.MatmulBackend)
+        assert be.name == name
+    assert B.get_backend("ideal").is_ideal
+    assert not B.get_backend("emulated").is_ideal
+
+
+def test_registry_unknown_name_and_instance_passthrough():
+    with pytest.raises(KeyError, match="unknown backend"):
+        B.get_backend("nope")
+    be = B.get_backend("reference")
+    assert B.get_backend(be) is be
+    with pytest.raises(ValueError, match="keyword"):
+        B.get_backend(be, array_n=8)
+
+
+def test_registry_factory_kwargs():
+    be = B.get_backend("emulated", array_n=4, tech="vtr-45nm")
+    assert be.accel.timing.n == 4
+    assert be.accel.timing.tech.name == "vtr-45nm"
+
+
+def test_use_backend_scoping_and_set_default():
+    assert B.current_backend().is_ideal                  # process default
+    emu = B.get_backend("emulated")
+    with B.use_backend(emu) as be:
+        assert be is emu and B.current_backend() is emu
+        with B.use_backend("reference"):
+            assert B.current_backend().name == "reference"
+        assert B.current_backend() is emu
+    assert B.current_backend().is_ideal
+    try:
+        prev = B.set_default("reference")
+        assert B.current_backend() is prev
+    finally:
+        B.set_default("ideal")
+    assert B.current_backend().is_ideal
+
+
+def test_router_ideal_is_native_dot():
+    a = jnp.asarray(np.arange(12, dtype=np.float32).reshape(3, 4))
+    b = jnp.asarray(np.arange(8, dtype=np.float32).reshape(4, 2))
+    np.testing.assert_array_equal(np.asarray(B.matmul(a, b)),
+                                  np.asarray(a @ b))
+
+
+def test_router_reshapes_leading_dims_through_host_backend():
+    rng = np.random.default_rng(0)
+    a = rng.integers(-3, 4, size=(2, 5, 8)).astype(np.float32)
+    w = rng.integers(-3, 4, size=(8, 6)).astype(np.float32)
+    emu = B.get_backend("emulated")
+    with B.use_backend(emu):
+        out = B.matmul(jnp.asarray(a), jnp.asarray(w))
+    assert out.shape == (2, 5, 6)
+    np.testing.assert_array_equal(np.asarray(out), a @ w)
+    assert emu.total.calls == 1 and emu.total.macs == 2 * 5 * 8 * 6
+
+
+def test_router_under_jit_and_scan_accumulates_telemetry():
+    """The emulated backend's host callback fires inside jit'd lax.scan —
+    the shape of every routed model decode step."""
+    rng = np.random.default_rng(1)
+    x = rng.integers(-3, 4, size=(4, 8)).astype(np.float32)
+    ws = rng.integers(-3, 4, size=(3, 8, 8)).astype(np.float32)
+    emu = B.get_backend("emulated")
+
+    with B.use_backend(emu):
+        @jax.jit
+        def fwd(x, ws):
+            def body(c, w):
+                return B.matmul(c, w), ()
+            out, _ = jax.lax.scan(body, x, ws)
+            return out
+
+        out = np.asarray(fwd(jnp.asarray(x), jnp.asarray(ws)))
+    expect = x
+    for w in ws:
+        expect = expect @ w
+    np.testing.assert_array_equal(out, expect)
+    assert emu.total.calls == 3                  # one host GEMM per layer
+    tel = emu.pop_telemetry()
+    assert tel.calls == 3 and tel.flags == 0
+    assert emu.pop_telemetry().calls == 0        # drained
+
+
+def test_grad_through_nonideal_backend_uses_ideal_path_vjp():
+    """Training through an injected-fault forward: the backward pass is the
+    exact straight-through gradient, so value_and_grad(api.loss) works for
+    every backend and matches the ideal backend's gradient at nominal rails
+    (order-independent data -> bit-comparable)."""
+    rng = np.random.default_rng(5)
+    x = rng.integers(-3, 4, size=(4, 8)).astype(np.float32)
+    w = rng.integers(-3, 4, size=(8, 6)).astype(np.float32)
+
+    def loss(w, x):
+        return jnp.sum(B.matmul(jnp.asarray(x), w) ** 2)
+
+    g_ideal = np.asarray(jax.grad(loss)(jnp.asarray(w), x))
+    with B.use_backend("emulated"):
+        val, g_emu = jax.value_and_grad(loss)(jnp.asarray(w), x)
+    assert np.isfinite(float(val))
+    np.testing.assert_array_equal(np.asarray(g_emu), g_ideal)
+
+
+def test_pop_telemetry_splits_steps_but_keeps_totals():
+    be = B.get_backend("reference")
+    a = np.ones((4, 4), np.float32)
+    be.matmul(a, a)
+    first = be.pop_telemetry()
+    assert first.calls == 1
+    be.matmul(a, a)
+    be.matmul(a, a)
+    second = be.pop_telemetry()
+    assert second.calls == 2
+    assert be.total.calls == 3
+    assert be.summary()["backend"] == "reference"
+    assert be.summary()["calls"] == 3
+
+
+def test_matmul_rejects_bad_shapes_and_precision():
+    be = B.get_backend("reference")
+    with pytest.raises(ValueError, match="matmul expects"):
+        be.matmul(np.ones((2, 3)), np.ones((4, 2)))
+    with pytest.raises(ValueError, match="precision"):
+        be.matmul(np.ones((2, 3)), np.ones((3, 2)), precision="fp4")
+
+
+def test_emulated_summary_carries_ledger_and_rails():
+    be = B.get_backend("emulated")
+    rng = np.random.default_rng(2)
+    be.matmul(rng.normal(size=(8, 8)), rng.normal(size=(8, 8)))
+    be.add_tokens(2)
+    s = be.summary()
+    assert s["backend"] == "emulated"
+    assert len(s["rails_v"]) == be.accel.n_partitions
+    assert s["tokens"] == 2
+    assert s["energy_per_token_j"] > 0
+    import json
+    json.dumps(s)

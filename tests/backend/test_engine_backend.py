@@ -1,0 +1,103 @@
+"""ServeEngine x repro.backend: all decode GEMMs on the emulated
+voltage-scaled array, per-step flag/energy telemetry in EngineStats, and the
+hwloop session as a thin watchdog adapter over the real GEMM flags."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.backend import get_backend
+from repro.configs import get_config
+from repro.models import model_api
+from repro.serve import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("starcoder2-3b", smoke=True)
+    api = model_api(cfg)
+    return cfg, api.init_params(jax.random.PRNGKey(0))
+
+
+def _drain(cfg, params, n_req=2, max_new=3, **engine_kw):
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, **engine_kw)
+    reqs = [Request(uid=i, prompt=[3 + i, 4 + i], max_new_tokens=max_new)
+            for i in range(n_req)]
+    for r in reqs:
+        eng.submit(r)
+    return eng, eng.run_until_drained(), reqs
+
+
+def test_emulated_backend_serves_all_decode_gemms(dense):
+    cfg, params = dense
+    be = get_backend("emulated")                 # nominal rails: zero flags
+    eng, stats, reqs = _drain(cfg, params, backend=be)
+    assert stats.completed == len(reqs)
+    assert stats.backend == "emulated"
+    # one flag vector per decode step, sized to the array's partitions
+    assert len(stats.backend_step_flags) == stats.decode_steps
+    assert all(len(f) == be.accel.n_partitions
+               for f in stats.backend_step_flags)
+    assert not any(any(f) for f in stats.backend_step_flags)
+    bt = stats.backend_telemetry
+    assert bt is not None and bt["backend"] == "emulated"
+    # the decode GEMMs really ran on the accelerator: MACs + energy accrued
+    assert bt["macs"] > 0 and bt["calls"] > 0
+    assert bt["flags"] == 0 and bt["replays"] == 0
+    # energy attributed to the decode-step tokens (prefill-emitted tokens are
+    # outside the decode loop, as in the legacy hwloop accounting)
+    assert bt["tokens"] == stats.tokens_generated - stats.admitted
+    assert bt["energy_per_token_j"] is not None
+    assert np.isfinite(bt["energy_per_token_j"])
+    assert bt["energy_per_token_j"] > 0
+    json.dumps(stats.to_dict())                  # telemetry is plain JSON
+
+
+def test_ideal_backend_is_a_zero_overhead_passthrough(dense):
+    """backend='ideal' must not change outputs vs no backend at all (the
+    router lowers it to the native dot), and adds no telemetry."""
+    cfg, params = dense
+    _, stats_none, reqs_none = _drain(cfg, params)
+    _, stats_ideal, reqs_ideal = _drain(cfg, params, backend="ideal")
+    assert [r.out_tokens for r in reqs_none] == \
+        [r.out_tokens for r in reqs_ideal]
+    assert stats_ideal.backend == "ideal"
+    assert stats_ideal.backend_step_flags == []
+    assert stats_ideal.backend_telemetry is None
+    assert stats_none.backend is None
+
+
+def test_hwloop_session_becomes_thin_adapter_over_backend(dense):
+    """With an emulated backend the session stops generating probe traffic:
+    the real GEMM flags feed its watchdog, and a mid-serve undervolt of the
+    SERVING device raises flags then heals through recalibration."""
+    from repro.flow import FlowConfig
+    from repro.hwloop import HwLoopSession
+
+    cfg, params = dense
+    session = HwLoopSession(
+        FlowConfig(array_n=8, tech="vtr-22nm", max_trials=8, seed=2021),
+        probe_rows=8, rail_margin=0.02, patience=2)
+    from repro.backend import EmulatedBackend
+    be = EmulatedBackend(session.accel)          # serve on the session's device
+    eng, stats, _ = _drain(cfg, params, n_req=3, max_new=4,
+                           backend=be, hwloop=session)
+    # adapter mode: session steps == decode steps, and the hwloop step-flag
+    # schema mirrors the backend's (no probe traffic ran)
+    assert session.steps == stats.decode_steps
+    assert stats.hwloop_step_flags == stats.backend_step_flags
+    assert stats.hwloop is not None
+    assert stats.hwloop["steps"] == stats.decode_steps
+
+    # undervolt partition 0 below its safe point on the LIVE serving device
+    v_safe = float(be.accel.timing.min_safe_voltage()
+                   [be.accel._part_grid == 0].max())
+    session.set_partition_voltage(0, v_safe - 0.02)
+    eng2, stats2, _ = _drain(cfg, params, n_req=3, max_new=4,
+                             backend=be, hwloop=session)
+    flagged = [f[0] for f in stats2.backend_step_flags]
+    assert any(flagged)                          # real GEMMs tripped Razor
+    assert session.recalibrations >= 1           # watchdog healed the rails
+    assert be.accel.rails[0] > v_safe - 0.02

@@ -1,0 +1,109 @@
+"""Backend parity matrix: {ideal, reference, simulated, emulated@nominal}
+x {f32, int8} x 3 shapes — bit-identity + telemetry invariants.
+
+Bit-identity across execution machineries (XLA f32 dot, jnp oracles, f64
+tiled cycle simulation, f64 tiled emulation) is only meaningful when the
+result is independent of reduction order, so the matrix uses small
+integer-valued operands: every partial product and sum is exactly
+representable in both f32 and f64, making the exact product THE unique
+answer every backend must hit bit for bit.  The int8 tier additionally
+exercises the shared host quantizer/dequantizer.
+"""
+
+import numpy as np
+import pytest
+
+from repro.backend import BackendTelemetry, get_backend
+
+BACKENDS = ("ideal", "reference", "simulated", "emulated")
+#: (M, K, N): one array-aligned, one K/N-ragged vs the 8x8 array, one with
+#: K and N spilling over multiple tiles non-uniformly.
+SHAPES = ((8, 8, 8), (16, 24, 8), (12, 40, 20))
+
+
+@pytest.fixture(scope="module")
+def backends():
+    # "simulated"/"emulated" resolve to nominal-rail 8x8 arrays (zero-fault
+    # operating points); "emulated" still prices every MAC in its ledger
+    return {name: get_backend(name) for name in BACKENDS}
+
+
+def _int_valued(rng, shape):
+    return rng.integers(-4, 5, size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("precision", ["f32", "int8"])
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "x".join(map(str, s)))
+def test_backend_parity_matrix(backends, shape, precision):
+    m, k, n = shape
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a = _int_valued(rng, (m, k))
+    b = _int_valued(rng, (k, n))
+    outs, tels = {}, {}
+    for name, be in backends.items():
+        out, tel = be.matmul(a, b, precision=precision)
+        outs[name], tels[name] = np.asarray(out), tel
+        assert outs[name].dtype == np.float32
+        assert outs[name].shape == (m, n)
+
+    # acceptance: nominal-rail emulated (and everything else) bit-identical
+    # to ideal
+    ref = outs["ideal"]
+    for name in BACKENDS[1:]:
+        assert np.array_equal(outs[name], ref), \
+            f"{name} diverged from ideal at {shape} {precision}"
+
+    # telemetry invariants: zero flags/replays/silent at nominal rails, the
+    # full M*K*N MAC count attributed, energy only where a ledger exists
+    for name, tel in tels.items():
+        assert isinstance(tel, BackendTelemetry)
+        assert tel.calls == 1
+        assert tel.macs == m * k * n, name
+        assert tel.flags == 0, name
+        assert tel.replays == 0, name
+        assert tel.silent == 0, name
+        assert tel.rel_error == 0.0, name
+        if tel.partition_flags is not None:
+            assert not any(tel.partition_flags), name
+    assert tels["emulated"].energy_j > 0          # ledger prices clean MACs
+    assert tels["ideal"].energy_j == 0.0
+    assert tels["reference"].energy_j == 0.0
+
+
+def test_native_precision_parity(backends):
+    """precision=None (the model-routing tier) keeps f32 inputs f32 and is
+    bit-identical across backends on order-independent data."""
+    rng = np.random.default_rng(7)
+    a = _int_valued(rng, (16, 24))
+    b = _int_valued(rng, (24, 8))
+    ref, _ = backends["ideal"].matmul(a, b)
+    for name in BACKENDS[1:]:
+        out, _ = backends[name].matmul(a, b)
+        assert out.dtype == np.float32
+        assert np.array_equal(np.asarray(out), np.asarray(ref)), name
+
+
+def test_undervolted_emulated_breaks_parity_and_reports_flags():
+    """The parity guarantee is a *nominal-rail* property: dropping a rail
+    into the Razor window raises flags/replays in the telemetry (and below
+    it, silent corruption) — the emulated backend is not a no-op shim."""
+    be = get_backend("emulated")
+    v_safe = float(be.accel.timing.min_safe_voltage().max())
+    be.accel.set_rails(np.full(be.accel.n_partitions, v_safe - 0.02))
+    rng = np.random.default_rng(3)
+    a = rng.normal(size=(32, 8))
+    b = rng.normal(size=(8, 8))
+    _, tel = be.matmul(a, b)
+    assert tel.flags > 0 and tel.replays > 0
+    assert any(tel.partition_flags)
+
+
+def test_count_flags_false_suppresses_flag_telemetry():
+    be = get_backend("emulated")
+    v_safe = float(be.accel.timing.min_safe_voltage().max())
+    be.accel.set_rails(np.full(be.accel.n_partitions, v_safe - 0.02))
+    rng = np.random.default_rng(4)
+    _, tel = be.matmul(rng.normal(size=(16, 8)), rng.normal(size=(8, 8)),
+                       count_flags=False)
+    assert tel.flags == 0 and tel.partition_flags is None
+    assert tel.replays > 0            # the physics still happened

@@ -1,0 +1,76 @@
+"""The shared BENCH_*.json schema: every JSON-writing scenario emits the
+same envelope (``scenario``, ``elapsed_s``, ``config``) and reuses the same
+config key names for the same concepts.
+
+Writers build their payloads through ``benchmarks.run.bench_payload``,
+which validates eagerly — so a scenario that drifts from the schema fails
+at write time (the CI jobs run all three writers); this module pins the
+validator itself plus one real artifact end to end.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks import run as br
+
+
+# ------------------------------------------------------------ validator ----
+
+def test_bench_payload_builds_valid_envelope():
+    p = br.bench_payload("demo", 1.25, {"arch": "x", "requests": 3},
+                         extra_metric=42)
+    assert set(br.BENCH_SCHEMA_KEYS) <= set(p)
+    assert p["scenario"] == "demo"
+    assert p["elapsed_s"] == 1.25
+    assert p["config"] == {"arch": "x", "requests": 3}
+    assert p["extra_metric"] == 42
+    json.dumps(p)                     # JSON-serializable
+
+
+@pytest.mark.parametrize("payload", [
+    {"elapsed_s": 1.0, "config": {}},                     # missing scenario
+    {"scenario": "x", "config": {}},                      # missing elapsed_s
+    {"scenario": "x", "elapsed_s": 1.0},                  # missing config
+    {"scenario": "", "elapsed_s": 1.0, "config": {}},     # empty scenario
+    {"scenario": "x", "elapsed_s": -1.0, "config": {}},   # negative elapsed
+    {"scenario": "x", "elapsed_s": float("nan"), "config": {}},
+    {"scenario": "x", "elapsed_s": 1.0, "config": [1]},   # config not a dict
+])
+def test_validator_rejects_schema_drift(payload):
+    with pytest.raises(ValueError):
+        br.validate_bench_payload(payload)
+
+
+def test_writers_share_config_key_names():
+    """The serve and hwloop scenarios describe the same serving workload, so
+    their config blocks must spell the shared concepts identically."""
+    serve_cfg = {"arch": "starcoder2-3b", "requests": 4, "slots": 2,
+                 "max_len": 48}
+    hwloop_cfg = {**serve_cfg, "flow": {"array_n": 8}}
+    shared = {"arch", "requests", "slots", "max_len"}
+    assert shared <= set(serve_cfg) and shared <= set(hwloop_cfg)
+    br.bench_payload("serve", 0.0, serve_cfg)
+    br.bench_payload("hwloop", 0.0, hwloop_cfg)
+
+
+# ------------------------------------------------- real artifact (flow) ----
+
+def test_flow_scenario_writes_schema_conformant_artifact(tmp_path,
+                                                         monkeypatch):
+    monkeypatch.setitem(br._OUT, "dir", str(tmp_path))
+    monkeypatch.setitem(br._OUT, "json_out", None)
+    br.bench_flow(fast=True)
+    path = tmp_path / "BENCH_flow.json"
+    assert path.exists()
+    payload = json.loads(path.read_text())
+    br.validate_bench_payload(payload)
+    assert payload["scenario"] == "flow"
+    assert payload["elapsed_s"] > 0 and np.isfinite(payload["elapsed_s"])
+    cfg = payload["config"]
+    for key in ("tech", "algo", "array_n", "seed", "repeats"):
+        assert key in cfg, key
+    # the CI perf gate's keys stay top-level
+    assert payload["bit_identical_reports"] is True
+    assert payload["speedup"] > 0

@@ -48,6 +48,40 @@ def test_default_interpret_matches_backend():
     assert tuning.resolve_interpret(False) is False
 
 
+@pytest.mark.skipif(jax.default_backend() != "cpu",
+                    reason="fallback warning only fires on CPU")
+def test_interpret_fallback_warns_once(monkeypatch):
+    import warnings as w
+    monkeypatch.setattr(tuning, "_INTERPRET_WARNED", False)
+    with pytest.warns(RuntimeWarning, match="interpret mode"):
+        assert tuning.default_interpret() is True
+    # second resolution is silent: the fallback is announced once per process
+    with w.catch_warnings():
+        w.simplefilter("error")
+        assert tuning.default_interpret() is True
+        assert tuning.resolve_interpret(None) is True
+
+
+def test_resolve_interpret_explicit_overrides_never_warn(monkeypatch):
+    import warnings as w
+    monkeypatch.setattr(tuning, "_INTERPRET_WARNED", False)
+    with w.catch_warnings():
+        w.simplefilter("error")
+        # explicit values bypass platform resolution entirely
+        assert tuning.resolve_interpret(True) is True
+        assert tuning.resolve_interpret(False) is False
+
+
+def test_sequential_grid_platform_matrix(monkeypatch):
+    # interpret mode always serializes the grid, on every platform
+    assert tuning.sequential_grid(True) is True
+    for platform, compiled_sequential in (("tpu", True), ("gpu", False),
+                                          ("cpu", False)):
+        monkeypatch.setattr(tuning.jax, "default_backend", lambda p=platform: p)
+        assert tuning.sequential_grid(True) is True
+        assert tuning.sequential_grid(False) is compiled_sequential
+
+
 # ------------------------------------------------------ fused epilogue ----
 
 def _ab(m, k, n, seed=0):
