@@ -7,7 +7,7 @@ cluster count, rel-error, ...).
         [--out-dir DIR] [--json-out PATH] [--min-flow-speedup X]
 
 JSON artifacts (``BENCH_serve.json``, ``BENCH_flow.json``,
-``BENCH_hwloop.json``) land in
+``BENCH_hwloop.json``, ``BENCH_traffic.json``) land in
 ``--out-dir`` (default: CWD); ``--json-out`` overrides the exact path when a
 single ``--only`` scenario is run.  ``--min-flow-speedup`` turns the ``flow``
 scenario into a CI gate: exit non-zero unless the vectorized sweep beats the
@@ -515,6 +515,78 @@ def bench_hwloop(fast: bool) -> List[Tuple[str, float, str]]:
     return rows
 
 
+def bench_traffic(fast: bool) -> List[Tuple[str, float, str]]:
+    """Traffic-trace overload envelope (repro.server): seeded Poisson /
+    heavy-tailed workloads replayed deterministically in virtual time at
+    1x/2x/4x the deployment's serving capacity, per execution backend.
+    Reports p50/p99 TTFT, tokens/s, and shed rate; writes
+    BENCH_traffic.json.  All latency numbers come from the injected
+    VirtualClock, so they are bit-reproducible across machines."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import model_api
+    from repro.serve import ServeEngine
+    from repro.server import (LoadHarness, TrafficConfig, TrafficGenerator,
+                              VirtualClock, overload_rate_rps)
+
+    mcfg = get_config("starcoder2-3b", smoke=True)
+    params = model_api(mcfg).init_params(jax.random.PRNGKey(0))
+    slots, max_len, max_pending, step_cost_s, seed = 2, 32, 6, 0.02, 0
+    duration_s = 1.5 if fast else 4.0
+    backends = ("ideal",) if fast else ("ideal", "emulated")
+    base = dict(duration_s=duration_s, seed=seed, max_prompt_len=8,
+                max_gen_len=8, prompt_len_log_mean=0.8,
+                prompt_len_log_sigma=0.5, gen_len_log_mean=1.0,
+                gen_len_log_sigma=0.5, diurnal_amplitude=0.5,
+                diurnal_period_s=duration_s, vocab_size=mcfg.vocab_size)
+
+    def make_backend(name):
+        if name == "ideal":
+            return None
+        from repro.backend import EmulatedBackend
+        from repro.flow import FlowConfig
+        from repro.flow import run as flow_run
+        fcfg = FlowConfig(array_n=8, tech="vtr-22nm", max_trials=8,
+                          seed=2021)
+        return EmulatedBackend.from_flow(flow_run(fcfg), fcfg)
+
+    rows: List[Tuple[str, float, str]] = []
+    per_backend: Dict[str, Dict] = {}
+    elapsed = 0.0
+    for backend in backends:
+        levels: Dict[str, Dict] = {}
+        for factor in (1.0, 2.0, 4.0):
+            rate = overload_rate_rps(factor, slots, step_cost_s,
+                                     TrafficConfig(**base))
+            events = TrafficGenerator(
+                TrafficConfig(rate_rps=rate, **base)).events()
+            clock = VirtualClock()
+            eng = ServeEngine(mcfg, params, slots=slots, max_len=max_len,
+                              clock=clock, policy="priority",
+                              max_pending=max_pending,
+                              backend=make_backend(backend))
+            m = LoadHarness(eng, clock, step_cost_s=step_cost_s) \
+                .replay(events)
+            levels[f"{factor:g}x"] = m.to_dict()
+            elapsed += m.wall_s
+            p99 = "n/a" if m.ttft_p99_s is None else f"{m.ttft_p99_s:.3f}s"
+            rows.append((f"traffic/{backend}_x{factor:g}", m.wall_s * 1e6,
+                         f"shed_rate={m.shed_rate:.2f}"
+                         f"_p99_ttft={p99}"
+                         f"_tok_per_s={m.tokens_per_s:.1f}"))
+        per_backend[backend] = levels
+    payload = bench_payload(
+        "traffic", elapsed,
+        {"arch": mcfg.name, "slots": slots, "max_len": max_len,
+         "max_pending": max_pending, "step_cost_s": step_cost_s,
+         "seed": seed, "policy": "priority", "traffic": base},
+        overload_factors=[1.0, 2.0, 4.0],
+        backends=per_backend)
+    with open(_json_path("BENCH_traffic.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+    return rows
+
+
 def bench_accuracy_voltage(fast: bool) -> List[Tuple[str, float, str]]:
     """BEYOND PAPER: the paper's stated future work (ii) — the trade-off
     between DNN accuracy (timing-failure corruption) and power as voltage
@@ -558,6 +630,7 @@ BENCHES: Dict[str, Callable] = {
     "power_report": bench_power_report,
     "serve": bench_serve,
     "hwloop": bench_hwloop,
+    "traffic": bench_traffic,
     "accuracy_voltage": bench_accuracy_voltage,
 }
 

@@ -30,6 +30,18 @@ Flags:
     --hwloop-tech / --hwloop-array-n
                                  operating point of the emulated array /
                                  hwloop session
+    --policy {fifo,priority}     scheduler admission policy; priority enables
+                                 tiers + TTFT-deadline shedding
+    --max-pending N              bounded admission queue (backpressure: a
+                                 full queue sheds instead of buffering)
+    --serve-http HOST:PORT       start the asyncio streaming frontend
+                                 (repro.server) over the engine and serve
+                                 until Ctrl-C, then drain gracefully
+    --trace FILE                 replay a traffic trace (NDJSON, written by
+                                 python -m repro.server.traffic) through the
+                                 deterministic virtual-time load harness
+                                 instead of the built-in random workload
+    --step-cost S                virtual seconds per model call for --trace
 """
 
 from __future__ import annotations
@@ -44,6 +56,68 @@ import numpy as np
 from ..configs import ARCHS, get_config
 from ..models import model_api
 from ..serve import Request, ServeEngine, WaveServeEngine
+
+
+def _serve_http(engine, hostport: str) -> None:
+    """Run the asyncio streaming frontend until interrupted, then drain."""
+    import asyncio
+
+    from ..server import ServeFrontend
+
+    host, _, port = hostport.rpartition(":")
+    frontend = ServeFrontend(engine)
+
+    async def run() -> None:
+        bound = await frontend.start(host or "127.0.0.1", int(port))
+        print(f"serving on http://{bound[0]}:{bound[1]} "
+              f"(POST /v1/generate, GET /healthz); Ctrl-C drains + exits")
+        try:
+            await frontend.serve_forever()
+        except asyncio.CancelledError:
+            pass
+        finally:
+            drained = await frontend.drain()
+            await frontend.close()
+            print(f"drained={drained}; served "
+                  f"{engine.stats.completed} completed / "
+                  f"{engine.stats.shed} shed / "
+                  f"{engine.stats.tokens_generated} tokens")
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+
+
+def _replay_trace(args, cfg, params, engine_kw) -> None:
+    """Replay a saved traffic trace deterministically in virtual time."""
+    from ..server import LoadHarness, VirtualClock, load_trace
+
+    clock = VirtualClock()
+    engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
+                         clock=clock, policy=args.policy,
+                         max_pending=args.max_pending, **engine_kw)
+    events = load_trace(args.trace)
+    harness = LoadHarness(engine, clock, step_cost_s=args.step_cost)
+    m = harness.replay(events)
+    p50 = "n/a" if m.ttft_p50_s is None else f"{1e3 * m.ttft_p50_s:.0f}ms"
+    p99 = "n/a" if m.ttft_p99_s is None else f"{1e3 * m.ttft_p99_s:.0f}ms"
+    met = "n/a" if m.deadline_met_frac is None \
+        else f"{100 * m.deadline_met_frac:.0f}%"
+    print(f"[trace {args.trace}] {m.n_events} arrivals over "
+          f"{m.elapsed_virtual_s:.2f} virtual s: {m.completed} completed / "
+          f"{m.truncated} truncated / {m.shed} shed "
+          f"(rate {m.shed_rate:.2f}, by tier {m.shed_by_priority}); "
+          f"{m.tokens_per_s:.1f} tok/s, TTFT p50 {p50} p99 {p99}, "
+          f"SLO met {met}; wall {m.wall_s:.1f}s")
+    if args.json_out:
+        payload = {"arch": args.arch, "trace": args.trace,
+                   "slots": args.slots, "policy": args.policy,
+                   "max_pending": args.max_pending,
+                   "step_cost_s": args.step_cost, **m.to_dict()}
+        with open(args.json_out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json_out}")
 
 
 def main() -> None:
@@ -66,6 +140,13 @@ def main() -> None:
     ap.add_argument("--hwloop", action="store_true")
     ap.add_argument("--hwloop-tech", default="vtr-22nm")
     ap.add_argument("--hwloop-array-n", type=int, default=8)
+    ap.add_argument("--policy", choices=("fifo", "priority"), default="fifo")
+    ap.add_argument("--max-pending", type=int, default=None)
+    ap.add_argument("--serve-http", type=str, default=None,
+                    metavar="HOST:PORT")
+    ap.add_argument("--trace", type=str, default=None, metavar="FILE")
+    ap.add_argument("--step-cost", type=float, default=0.02,
+                    help="virtual seconds per model call under --trace")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -74,9 +155,14 @@ def main() -> None:
     engine_cls = ServeEngine if args.engine == "continuous" else WaveServeEngine
     engine_kw = {}
     fcfg, store = None, None
-    if args.backend != "ideal" or args.hwloop:
-        if args.engine != "continuous":
-            ap.error("--backend/--hwloop require the continuous engine")
+    if args.engine != "continuous" and (
+            args.backend != "ideal" or args.hwloop or args.serve_http
+            or args.trace or args.policy != "fifo"
+            or args.max_pending is not None):
+        ap.error("--backend/--hwloop/--serve-http/--trace/--policy/"
+                 "--max-pending require the continuous engine")
+    if args.serve_http and args.trace:
+        ap.error("--serve-http and --trace are mutually exclusive")
     if args.backend == "emulated" or args.hwloop:
         # only these two paths run the CAD flow; one artifact store shared
         # by the backend's flow run and the hwloop watchdog executes it once
@@ -101,8 +187,17 @@ def main() -> None:
         from ..hwloop import HwLoopSession
         engine_kw["hwloop"] = HwLoopSession(fcfg, probe_rows=8,
                                             rail_margin=0.02, store=store)
+
+    if args.trace:
+        _replay_trace(args, cfg, params, engine_kw)
+        return
+    if args.engine == "continuous":
+        engine_kw.update(policy=args.policy, max_pending=args.max_pending)
     engine = engine_cls(cfg, params, slots=args.slots, max_len=args.max_len,
                         **engine_kw)
+    if args.serve_http:
+        _serve_http(engine, args.serve_http)
+        return
 
     rng = np.random.default_rng(args.seed)
     reqs = []

@@ -28,6 +28,18 @@ for ALL model GEMMs: ``backend="emulated"`` serves every decode matmul on
 the fault-injecting voltage-scaled array, with per-step per-partition Razor
 flags (``backend_step_flags``) and the backend's lifetime flag/replay/energy
 summary (``backend_telemetry``) in ``EngineStats``.
+
+Both engines read wall-clock time through an injectable ``clock`` callable
+(default ``time.monotonic``): every latency stamp — ``Request.submit_t`` /
+``first_token_t`` / ``finish_t`` and therefore ``ttft_s`` — comes from it,
+so tests and the ``repro.server`` traffic harness swap in a virtual clock
+and get bit-deterministic latency telemetry.
+
+``ServeEngine(policy="priority", max_pending=N)`` forwards QoS admission to
+the ``SlotScheduler``: priority tiers, TTFT-deadline shedding, and
+bounded-queue backpressure (``submit()`` then returns False for a shed
+request, and ``EngineStats.shed`` counts every drop).  The default
+(``policy="fifo"``, unbounded) is bit-compatible with the seed engine.
 """
 
 from __future__ import annotations
@@ -35,7 +47,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +71,7 @@ class EngineStats:
     completed: int = 0               # served the full max_new_tokens
     truncated: int = 0               # cut short by budget or max_len
     unserved: int = 0                # still queued at run_until_drained return
+    shed: int = 0                    # dropped by admission (queue/deadline)
     tokens_generated: int = 0
     slot_busy_steps: List[int] = dataclasses.field(default_factory=list)
     ttft_s: List[float] = dataclasses.field(default_factory=list)
@@ -101,8 +114,11 @@ class ServeEngine:
     """Continuous-batching engine over a fixed number of decode slots."""
 
     def __init__(self, cfg: ModelConfig, params: Pytree, slots: int = 4,
-                 max_len: int = 128, hwloop=None, backend=None):
+                 max_len: int = 128, hwloop=None, backend=None,
+                 clock: Callable[[], float] = time.monotonic,
+                 policy: str = "fifo", max_pending: Optional[int] = None):
         self.cfg = cfg
+        self._clock = clock
         # execution backend for ALL model GEMMs (a repro.backend name or
         # instance): "emulated" serves every decode matmul on the
         # fault-injecting voltage-scaled array with flag/energy telemetry
@@ -126,7 +142,8 @@ class ServeEngine:
                                 and hasattr(backend, "accel"))
         if self._hwloop_adapter:
             self.hwloop.attach_accelerator(backend.accel)
-        self.scheduler = SlotScheduler(slots)
+        self.scheduler = SlotScheduler(slots, policy=policy,
+                                       max_pending=max_pending, clock=clock)
         self.stats = EngineStats(
             slot_busy_steps=[0] * slots,
             backend=backend.name if backend is not None else None)
@@ -148,9 +165,14 @@ class ServeEngine:
 
     # ---- intake --------------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
-        req.submit_t = time.monotonic()
-        self.scheduler.submit(req)
+    def submit(self, req: Request) -> bool:
+        """Queue a request.  Returns False when the scheduler shed it on
+        admission (bounded queue under the priority policy) — the request
+        never decodes and ``EngineStats.shed`` counts it."""
+        req.submit_t = self._clock()
+        accepted = self.scheduler.submit(req)
+        self.stats.shed = self.scheduler.n_shed
+        return accepted
 
     # for callers poking at the backlog (launchers, tests)
     @property
@@ -188,11 +210,19 @@ class ServeEngine:
     def _emit(self, slot: int, req: Request, tok: int) -> None:
         req.out_tokens.append(tok)
         if req.first_token_t is None:
-            req.first_token_t = time.monotonic()
+            req.first_token_t = self._clock()
             if req.submit_t is not None:
                 self.stats.ttft_s.append(req.first_token_t - req.submit_t)
         self._cur[slot] = tok
         self.stats.tokens_generated += 1
+        if req.on_token is not None:
+            req.on_token(req, tok)
+
+    def _finished(self, req: Request) -> None:
+        """Terminal-state bookkeeping shared by every finish site."""
+        req.finish_t = self._clock()
+        if req.on_finish is not None:
+            req.on_finish(req)
 
     def _maybe_finish(self, slot: int, req: Request) -> None:
         # generating n tokens writes n-1 of them into the cache (positions
@@ -200,16 +230,16 @@ class ServeEngine:
         cap = self.max_len - max(len(req.prompt), 1)
         if len(req.out_tokens) >= req.max_new_tokens:
             req.done = True
-            req.finish_t = time.monotonic()
             self.stats.completed += 1
             self.scheduler.evict(slot)
             self._cur[slot] = BOS          # idle slots are fed BOS
+            self._finished(req)
         elif len(req.out_tokens) >= cap:
             req.done = req.truncated = True
-            req.finish_t = time.monotonic()
             self.stats.truncated += 1
             self.scheduler.evict(slot)
             self._cur[slot] = BOS
+            self._finished(req)
 
     def _admit(self, budget: int) -> int:
         """Fill free slots until the queue, the slots, or the budget run out.
@@ -228,9 +258,9 @@ class ServeEngine:
                 if len(req.prompt) >= self.max_len:
                     # cannot absorb at all: report, never serve garbage
                     req.done = req.truncated = True
-                    req.finish_t = time.monotonic()
                     self.stats.truncated += 1
                     self.scheduler.evict(slot)
+                    self._finished(req)
                     continue
                 logits, sub, n = self._absorb(req)
                 used += n
@@ -253,6 +283,7 @@ class ServeEngine:
         decode step.  Idle slots are fed BOS and skipped in argmax/token
         bookkeeping.  Returns model calls used."""
         used = self._admit(budget)
+        self.stats.shed = self.scheduler.n_shed
         if not self.scheduler.active or used >= budget:
             return used
         if self._track_backend:
@@ -300,9 +331,10 @@ class ServeEngine:
         for slot in list(self.scheduler.active):
             req = self.scheduler.evict(slot)
             req.done = req.truncated = True
-            req.finish_t = time.monotonic()
             self.stats.truncated += 1
+            self._finished(req)
         self.stats.unserved = self.scheduler.n_pending
+        self.stats.shed = self.scheduler.n_shed
         if self.hwloop is not None:
             self.stats.hwloop = self.hwloop.summary()
         if self._track_backend:
@@ -322,8 +354,10 @@ class WaveServeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params: Pytree, slots: int = 4,
-                 max_len: int = 128):
+                 max_len: int = 128,
+                 clock: Callable[[], float] = time.monotonic):
         self.cfg = cfg
+        self._clock = clock
         self.api = model_api(cfg)
         self.params = params
         self.slots = slots
@@ -334,7 +368,7 @@ class WaveServeEngine:
         self._step = jax.jit(self.api.decode_step)
 
     def submit(self, req: Request) -> None:
-        req.submit_t = time.monotonic()
+        req.submit_t = self._clock()
         self.queue.append(req)
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
@@ -378,14 +412,14 @@ class WaveServeEngine:
                 if not r.done:
                     r.out_tokens.append(int(cur[i]))
                     if r.first_token_t is None:
-                        r.first_token_t = time.monotonic()
+                        r.first_token_t = self._clock()
                         if r.submit_t is not None:
                             self.stats.ttft_s.append(
                                 r.first_token_t - r.submit_t)
                     self.stats.tokens_generated += 1
                     if len(r.out_tokens) >= r.max_new_tokens:
                         r.done = True
-                        r.finish_t = time.monotonic()
+                        r.finish_t = self._clock()
                         self.stats.completed += 1
             if all(r.done for r in wave):
                 break
@@ -404,6 +438,6 @@ class WaveServeEngine:
                 # ran out of budget or cache length: this request did NOT
                 # receive its max_new_tokens — report it truncated
                 r.done = r.truncated = True
-                r.finish_t = time.monotonic()
+                r.finish_t = self._clock()
                 self.stats.truncated += 1
         return steps

@@ -1,0 +1,112 @@
+"""Minimal asyncio streaming client for the ``repro.server`` frontend.
+
+Stdlib-only HTTP/1.1 with chunked-transfer decoding, shared by the
+end-to-end tests and the overload example so neither hand-rolls the wire
+format.  ``stream_generate`` consumes the NDJSON token stream as it arrives
+and returns the full transcript; ``get_json`` fetches a JSON endpoint
+(``/healthz``).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    """Outcome of one streamed /v1/generate call."""
+    http_status: int
+    tokens: List[int]
+    summary: Dict[str, Any]          # final NDJSON line (or the error body)
+
+    @property
+    def status(self) -> str:
+        return str(self.summary.get("status", "error"))
+
+    @property
+    def ok(self) -> bool:
+        return self.http_status == 200
+
+
+async def _read_headers(reader: asyncio.StreamReader):
+    status_line = (await reader.readline()).decode("latin-1").strip()
+    http_status = int(status_line.split()[1])
+    headers: Dict[str, str] = {}
+    while True:
+        raw = await reader.readline()
+        if raw in (b"\r\n", b"\n", b""):
+            break
+        key, _, val = raw.decode("latin-1").partition(":")
+        headers[key.strip().lower()] = val.strip()
+    return http_status, headers
+
+
+async def _read_body(reader: asyncio.StreamReader,
+                     headers: Dict[str, str]) -> bytes:
+    if headers.get("transfer-encoding", "").lower() == "chunked":
+        out = b""
+        while True:
+            size = int((await reader.readline()).strip() or b"0", 16)
+            if size == 0:
+                await reader.readline()       # trailing CRLF
+                return out
+            out += await reader.readexactly(size)
+            await reader.readexactly(2)       # chunk CRLF
+    n = int(headers.get("content-length", "0") or 0)
+    return await reader.readexactly(n) if n else b""
+
+
+async def _request(host: str, port: int, method: str, path: str,
+                   body: Optional[bytes] = None):
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        body = body or b""
+        head = (f"{method} {path} HTTP/1.1\r\nHost: {host}:{port}\r\n"
+                f"Content-Type: application/json\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                f"Connection: close\r\n\r\n")
+        writer.write(head.encode() + body)
+        await writer.drain()
+        http_status, headers = await _read_headers(reader)
+        payload = await _read_body(reader, headers)
+        return http_status, payload
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+
+
+async def get_json(host: str, port: int, path: str) -> Dict[str, Any]:
+    status, payload = await _request(host, port, "GET", path)
+    out = json.loads(payload or b"{}")
+    out["_http_status"] = status
+    return out
+
+
+async def stream_generate(host: str, port: int, prompt: Sequence[int],
+                          max_new_tokens: int = 8,
+                          priority: str = "normal",
+                          deadline_s: Optional[float] = None,
+                          timeout_s: float = 120.0) -> GenerateResult:
+    body = json.dumps({
+        "prompt": list(prompt), "max_new_tokens": max_new_tokens,
+        "priority": priority, "deadline_s": deadline_s,
+    }).encode()
+    status, payload = await asyncio.wait_for(
+        _request(host, port, "POST", "/v1/generate", body), timeout_s)
+    tokens: List[int] = []
+    summary: Dict[str, Any] = {}
+    for line in payload.decode().splitlines():
+        if not line.strip():
+            continue
+        obj = json.loads(line)
+        if "token" in obj:
+            tokens.append(int(obj["token"]))
+        else:
+            summary = obj
+    return GenerateResult(http_status=status, tokens=tokens, summary=summary)

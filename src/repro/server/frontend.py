@@ -1,0 +1,285 @@
+"""Async streaming HTTP frontend over the continuous-batching ``ServeEngine``.
+
+Stdlib-only (asyncio + a hand-rolled HTTP/1.1 layer — no Flask/aiohttp
+dependency), built for throughput: the asyncio event loop only parses
+requests and shuttles bytes, while ONE pump thread owns every jax call and
+drives ``ServeEngine.step()`` continuously.  Handlers talk to the engine
+through the scheduler's admission queue; per-token streaming rides the
+``Request.on_token``/``on_finish`` callbacks, which hop thread -> event loop
+via ``loop.call_soon_threadsafe`` into a per-request ``asyncio.Queue``.
+
+Endpoints:
+
+``POST /v1/generate``
+    Body ``{"prompt": [ints], "max_new_tokens": n, "priority":
+    "low|normal|high", "deadline_s": s}``.  Streams newline-delimited JSON
+    (chunked transfer encoding): one ``{"token": t}`` line per generated
+    token, then a final ``{"done": true, "status": ..., "n_tokens": ...,
+    "ttft_s": ...}`` summary line.  Headers are deferred until the first
+    engine event, so a request shed *after* admission (deadline expiry,
+    displaced by a higher tier) still gets a clean ``503`` instead of an
+    empty 200 stream.
+
+``GET /healthz``
+    Queue depth, shed/admission counters, and drain state as JSON — the
+    load-balancer view of backpressure.
+
+Overload behaviour is the scheduler's: with ``ServeEngine(policy="priority",
+max_pending=N)`` a full queue sheds (HTTP 503 with shed telemetry) rather
+than buffering unboundedly, and expired TTFT SLOs shed queued requests
+before they waste decode slots.  ``drain()`` stops admission (503
+``draining``) but finishes every already-admitted stream before ``close()``
+tears the pump down — a rolling-restart never clips a live response.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import itertools
+import json
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+from ..serve import Priority, Request
+
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            503: "Service Unavailable"}
+
+
+def _json_response(status: int, obj: Dict[str, Any]) -> bytes:
+    body = json.dumps(obj).encode()
+    return (f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n").encode() + body
+
+
+class ServeFrontend:
+    """Asyncio HTTP server wrapping one ``ServeEngine``."""
+
+    def __init__(self, engine, pump_idle_s: float = 0.005):
+        self.engine = engine
+        self._pump_idle_s = pump_idle_s
+        # one lock serializes scheduler mutation (handler submits) against
+        # the pump's engine.step(); the pump holds it per step, so handler
+        # submission latency is bounded by one model call
+        self._lock = threading.Lock()
+        self._work = threading.Event()
+        self._stop = threading.Event()
+        self._pump_error: Optional[BaseException] = None
+        self._draining = False
+        self._uids = itertools.count()
+        self._thread: Optional[threading.Thread] = None
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self.address: Optional[Tuple[str, int]] = None
+
+    # ---- engine pump (the only thread that touches jax) ----------------------
+
+    def _pump(self) -> None:
+        try:
+            while not self._stop.is_set():
+                with self._lock:
+                    busy = not self.engine.scheduler.drained()
+                    if busy:
+                        self.engine.step()
+                if not busy:
+                    self._work.wait(self._pump_idle_s)
+                    self._work.clear()
+        except BaseException as e:            # surface, never die silently
+            self._pump_error = e
+
+    # ---- lifecycle -----------------------------------------------------------
+
+    async def start(self, host: str = "127.0.0.1",
+                    port: int = 0) -> Tuple[str, int]:
+        """Bind and start serving; returns the (host, port) actually bound
+        (port 0 picks an ephemeral port)."""
+        self._loop = asyncio.get_running_loop()
+        self._thread = threading.Thread(target=self._pump, daemon=True,
+                                        name="serve-engine-pump")
+        self._thread.start()
+        self._server = await asyncio.start_server(self._handle, host, port)
+        self.address = self._server.sockets[0].getsockname()[:2]
+        return self.address
+
+    async def drain(self, timeout_s: float = 60.0) -> bool:
+        """Graceful drain: stop admitting, finish every in-flight request.
+        Returns True when the engine fully drained within the timeout."""
+        self._draining = True
+        self._work.set()
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + timeout_s
+        # racy read by design: drained() only inspects container emptiness,
+        # and taking the lock here would stall the event loop on a jax step
+        while not self.engine.scheduler.drained():
+            if self._pump_error is not None or loop.time() > deadline:
+                return False
+            await asyncio.sleep(0.005)
+        return True
+
+    async def close(self) -> None:
+        """Stop the pump and the listener (call ``drain()`` first for a
+        graceful shutdown)."""
+        self._stop.set()
+        self._work.set()
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        if self._thread is not None:
+            await asyncio.get_running_loop().run_in_executor(
+                None, self._thread.join)
+        if self._pump_error is not None:
+            raise self._pump_error
+
+    async def serve_forever(self) -> None:
+        assert self._server is not None, "call start() first"
+        await self._server.serve_forever()
+
+    # ---- telemetry -----------------------------------------------------------
+
+    def health(self) -> Dict[str, Any]:
+        s, sched = self.engine.stats, self.engine.scheduler
+        return {
+            "status": "draining" if self._draining else "ok",
+            "pending": sched.n_pending,
+            "active": sched.n_active,
+            "slots": sched.slots,
+            "policy": sched.policy,
+            "max_pending": sched.max_pending,
+            "admitted": s.admitted,
+            "completed": s.completed,
+            "truncated": s.truncated,
+            "shed": sched.n_shed,
+            "shed_rate": sched.n_shed / max(s.admitted + sched.n_shed
+                                            + sched.n_pending, 1),
+            "tokens_generated": s.tokens_generated,
+            "decode_steps": s.decode_steps,
+            "backend": s.backend,
+        }
+
+    # ---- HTTP plumbing -------------------------------------------------------
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            method, path, headers, body = await self._read_request(reader)
+            if method == "GET" and path == "/healthz":
+                writer.write(_json_response(200, self.health()))
+            elif method == "POST" and path == "/v1/generate":
+                await self._generate(writer, body)
+            else:
+                writer.write(_json_response(
+                    404, {"error": f"no route {method} {path}"}))
+            await writer.drain()
+        except (asyncio.IncompleteReadError, ConnectionResetError,
+                BrokenPipeError):
+            pass                               # client went away mid-stream
+        except ValueError as e:
+            try:
+                writer.write(_json_response(400, {"error": str(e)}))
+                await writer.drain()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    @staticmethod
+    async def _read_request(reader: asyncio.StreamReader):
+        line = (await reader.readline()).decode("latin-1").strip()
+        if not line:
+            raise asyncio.IncompleteReadError(b"", None)
+        try:
+            method, path, _ = line.split(None, 2)
+        except ValueError:
+            raise ValueError(f"malformed request line {line!r}")
+        headers: Dict[str, str] = {}
+        while True:
+            raw = await reader.readline()
+            if raw in (b"\r\n", b"\n", b""):
+                break
+            key, _, val = raw.decode("latin-1").partition(":")
+            headers[key.strip().lower()] = val.strip()
+        n = int(headers.get("content-length", "0") or 0)
+        body = await reader.readexactly(n) if n else b""
+        return method, path, headers, body
+
+    # ---- streaming generation ------------------------------------------------
+
+    def _parse_generate(self, body: bytes) -> Request:
+        try:
+            payload = json.loads(body or b"{}")
+        except json.JSONDecodeError as e:
+            raise ValueError(f"invalid JSON body: {e}")
+        prompt = payload.get("prompt", [])
+        if not isinstance(prompt, list) or \
+                not all(isinstance(t, int) for t in prompt):
+            raise ValueError("prompt must be a list of token ids")
+        try:
+            priority = Priority[str(payload.get("priority", "normal")).upper()]
+        except KeyError:
+            raise ValueError(f"unknown priority {payload.get('priority')!r}")
+        deadline = payload.get("deadline_s")
+        return Request(
+            uid=next(self._uids), prompt=prompt,
+            max_new_tokens=int(payload.get("max_new_tokens", 8)),
+            priority=priority,
+            deadline_s=None if deadline is None else float(deadline))
+
+    async def _generate(self, writer: asyncio.StreamWriter,
+                        body: bytes) -> None:
+        req = self._parse_generate(body)
+        if self._draining:
+            writer.write(_json_response(
+                503, {"error": "draining", "uid": req.uid}))
+            return
+        loop = asyncio.get_running_loop()
+        events: asyncio.Queue = asyncio.Queue()
+        req.on_token = lambda r, tok: loop.call_soon_threadsafe(
+            events.put_nowait, ("token", tok))
+        req.on_finish = lambda r: loop.call_soon_threadsafe(
+            events.put_nowait, ("finish", None))
+        with self._lock:
+            accepted = self.engine.submit(req)
+        self._work.set()
+        if not accepted:
+            writer.write(_json_response(503, self._shed_payload(req)))
+            return
+        # defer the status line until the engine says something: a request
+        # shed from the queue gets a 503, not an empty 200 stream
+        kind, tok = await events.get()
+        if kind == "finish" and req.shed:
+            writer.write(_json_response(503, self._shed_payload(req)))
+            return
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: application/x-ndjson\r\n"
+                     b"Transfer-Encoding: chunked\r\n"
+                     b"Connection: close\r\n\r\n")
+        while True:
+            if kind == "token":
+                await self._chunk(writer, {"token": tok})
+            elif kind == "finish":
+                await self._chunk(writer, {
+                    "done": True, "uid": req.uid, "status": req.status,
+                    "n_tokens": len(req.out_tokens),
+                    "ttft_s": req.ttft_s,
+                    "deadline_met": req.deadline_met(),
+                })
+                break
+            kind, tok = await events.get()
+        writer.write(b"0\r\n\r\n")             # chunked stream terminator
+
+    def _shed_payload(self, req: Request) -> Dict[str, Any]:
+        return {"error": "overloaded", "uid": req.uid, "status": "shed",
+                "reason": req.shed_reason,
+                "shed_rate": self.health()["shed_rate"]}
+
+    @staticmethod
+    async def _chunk(writer: asyncio.StreamWriter, obj: Dict[str, Any]) -> None:
+        data = (json.dumps(obj) + "\n").encode()
+        writer.write(f"{len(data):x}\r\n".encode() + data + b"\r\n")
+        await writer.drain()

@@ -44,15 +44,20 @@ def test_validator_rejects_schema_drift(payload):
 
 
 def test_writers_share_config_key_names():
-    """The serve and hwloop scenarios describe the same serving workload, so
-    their config blocks must spell the shared concepts identically."""
+    """The serve, hwloop and traffic scenarios describe the same serving
+    deployment, so their config blocks must spell the shared concepts
+    identically."""
     serve_cfg = {"arch": "starcoder2-3b", "requests": 4, "slots": 2,
                  "max_len": 48}
     hwloop_cfg = {**serve_cfg, "flow": {"array_n": 8}}
-    shared = {"arch", "requests", "slots", "max_len"}
-    assert shared <= set(serve_cfg) and shared <= set(hwloop_cfg)
+    traffic_cfg = {"arch": "starcoder2-3b", "slots": 2, "max_len": 48,
+                   "seed": 0, "traffic": {"rate_rps": 4.0}}
+    shared = {"arch", "slots", "max_len"}
+    for cfg in (serve_cfg, hwloop_cfg, traffic_cfg):
+        assert shared <= set(cfg)
     br.bench_payload("serve", 0.0, serve_cfg)
     br.bench_payload("hwloop", 0.0, hwloop_cfg)
+    br.bench_payload("traffic", 0.0, traffic_cfg)
 
 
 # ------------------------------------------------- real artifact (flow) ----
@@ -74,3 +79,34 @@ def test_flow_scenario_writes_schema_conformant_artifact(tmp_path,
     # the CI perf gate's keys stay top-level
     assert payload["bit_identical_reports"] is True
     assert payload["speedup"] > 0
+
+
+# ---------------------------------------------- real artifact (traffic) ----
+
+def test_traffic_scenario_writes_schema_conformant_artifact(tmp_path,
+                                                            monkeypatch):
+    monkeypatch.setitem(br._OUT, "dir", str(tmp_path))
+    monkeypatch.setitem(br._OUT, "json_out", None)
+    br.bench_traffic(fast=True)
+    path = tmp_path / "BENCH_traffic.json"
+    assert path.exists()
+    payload = json.loads(path.read_text())
+    br.validate_bench_payload(payload)
+    assert payload["scenario"] == "traffic"
+    assert payload["elapsed_s"] > 0 and np.isfinite(payload["elapsed_s"])
+    cfg = payload["config"]
+    for key in ("arch", "slots", "max_len", "max_pending", "step_cost_s",
+                "seed", "policy", "traffic"):
+        assert key in cfg, key
+    assert payload["overload_factors"] == [1.0, 2.0, 4.0]
+    levels = payload["backends"]["ideal"]
+    assert set(levels) == {"1x", "2x", "4x"}
+    for m in levels.values():
+        for key in ("ttft_p50_s", "ttft_p99_s", "tokens_per_s", "shed_rate",
+                    "elapsed_virtual_s", "deadline_met_frac"):
+            assert key in m, key
+        assert m["completed"] + m["truncated"] + m["shed"] == m["n_events"]
+    # offered load beyond capacity must shed monotonically more
+    assert levels["4x"]["shed_rate"] >= levels["2x"]["shed_rate"] \
+        >= levels["1x"]["shed_rate"]
+    assert levels["4x"]["shed_rate"] > 0

@@ -1,0 +1,149 @@
+"""Priority/SLO admission policy (pure python, no model): tier ordering,
+EDF within a tier, bounded-queue backpressure, deadline shedding, and
+bit-compatibility of the default FIFO path."""
+
+import pytest
+
+from repro.serve import Priority, Request, SlotScheduler
+
+
+class FakeClock:
+    def __init__(self, now=0.0):
+        self.now = now
+
+    def __call__(self):
+        return self.now
+
+
+def _req(uid, priority=Priority.NORMAL, deadline_s=None, submit_t=0.0):
+    r = Request(uid=uid, prompt=[3, 4], max_new_tokens=4,
+                priority=priority, deadline_s=deadline_s)
+    r.submit_t = submit_t
+    return r
+
+
+# ---- admission ordering ------------------------------------------------------
+
+def test_priority_tiers_win_admission():
+    s = SlotScheduler(1, policy="priority", clock=FakeClock())
+    for uid, prio in enumerate([Priority.LOW, Priority.NORMAL,
+                                Priority.HIGH]):
+        s.submit(_req(uid, prio))
+    order = []
+    while s.pending:
+        [(slot, req)] = s.admit()
+        order.append(req.uid)
+        s.evict(slot)
+    assert order == [2, 1, 0]          # HIGH, NORMAL, LOW
+
+
+def test_edf_within_tier_fifo_tiebreak():
+    s = SlotScheduler(1, policy="priority", clock=FakeClock())
+    s.submit(_req(0, deadline_s=9.0))
+    s.submit(_req(1, deadline_s=2.0))   # tightest SLO jumps the queue
+    s.submit(_req(2))                   # no SLO sorts last
+    s.submit(_req(3, deadline_s=9.0))   # ties with 0 -> FIFO
+    order = []
+    while s.pending:
+        [(slot, req)] = s.admit()
+        order.append(req.uid)
+        s.evict(slot)
+    assert order == [1, 0, 3, 2]
+
+
+def test_fifo_policy_ignores_priority_fields():
+    s = SlotScheduler(1)                # default: seed-compatible FIFO
+    s.submit(_req(0, Priority.LOW, deadline_s=0.0))
+    s.submit(_req(1, Priority.HIGH))
+    [(slot, req)] = s.admit()
+    assert req.uid == 0                 # strict arrival order, nothing shed
+    assert s.n_shed == 0
+
+
+# ---- bounded queue / backpressure --------------------------------------------
+
+def test_bounded_queue_rejects_newcomer_at_equal_priority():
+    s = SlotScheduler(1, policy="priority", max_pending=2, clock=FakeClock())
+    assert s.submit(_req(0))
+    assert s.submit(_req(1))
+    late = _req(2)
+    assert not s.submit(late)           # backpressure: shed, not buffered
+    assert late.shed and late.done and late.shed_reason == "queue_full"
+    assert s.n_pending == 2 and s.n_shed == 1
+
+
+def test_bounded_queue_sheds_lowest_priority_victim():
+    s = SlotScheduler(1, policy="priority", max_pending=2, clock=FakeClock())
+    low, norm = _req(0, Priority.LOW), _req(1, Priority.NORMAL)
+    s.submit(low)
+    s.submit(norm)
+    high = _req(2, Priority.HIGH)
+    assert s.submit(high)               # displaces the LOW victim
+    assert low.shed and low.shed_reason == "queue_full"
+    assert not high.shed and not norm.shed
+    assert [r.uid for r in s.pending] == [1, 2]
+
+
+def test_fifo_bounded_queue_never_displaces():
+    s = SlotScheduler(1, policy="fifo", max_pending=1)
+    s.submit(_req(0, Priority.LOW))
+    high = _req(1, Priority.HIGH)
+    assert not s.submit(high)           # FIFO has no displacement
+    assert high.shed
+
+
+def test_shed_notifies_on_finish():
+    s = SlotScheduler(1, policy="priority", max_pending=1, clock=FakeClock())
+    s.submit(_req(0))
+    seen = []
+    victim = _req(1)
+    victim.on_finish = seen.append
+    s.submit(victim)
+    assert seen == [victim] and victim.status == "shed"
+
+
+# ---- deadline shedding -------------------------------------------------------
+
+def test_expired_deadline_is_shed_not_decoded():
+    clock = FakeClock()
+    s = SlotScheduler(1, policy="priority", clock=clock)
+    doomed = _req(0, deadline_s=1.0)
+    fine = _req(1, deadline_s=10.0)
+    s.submit(doomed)
+    s.submit(fine)
+    clock.now = 5.0                     # doomed's TTFT SLO already blown
+    admissions = s.admit()
+    assert [r.uid for _, r in admissions] == [1]
+    assert doomed.shed and doomed.shed_reason == "deadline"
+    assert doomed.finish_t == 5.0       # stamped from the injected clock
+    assert s.n_shed == 1
+
+
+def test_unexpired_deadline_survives_admission():
+    clock = FakeClock()
+    s = SlotScheduler(2, policy="priority", clock=clock)
+    s.submit(_req(0, deadline_s=1.0))
+    clock.now = 0.5
+    assert [r.uid for _, r in s.admit()] == [0]
+    assert s.n_shed == 0
+
+
+# ---- request status surface --------------------------------------------------
+
+def test_request_status_and_deadline_met():
+    r = _req(0, deadline_s=1.0)
+    assert r.status == "pending"
+    assert r.deadline_met() is False    # no first token yet
+    r.out_tokens.append(7)
+    r.first_token_t = 0.4
+    assert r.status == "running" and r.deadline_met() is True
+    r.done = True
+    assert r.status == "completed"
+    assert _req(1).deadline_met() is None   # no SLO -> no verdict
+
+
+def test_scheduler_validates_arguments():
+    with pytest.raises(ValueError):
+        SlotScheduler(1, policy="lifo")
+    with pytest.raises(ValueError):
+        SlotScheduler(1, max_pending=0)

@@ -1,0 +1,124 @@
+"""Virtual-time load harness: deterministic latency telemetry under the
+injected clock, overload shedding, and metric integrity on a real (smoke)
+engine."""
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_api
+from repro.serve import Request, ServeEngine
+from repro.server import (LoadHarness, TrafficConfig, TrafficGenerator,
+                          TrafficMetrics, VirtualClock, overload_rate_rps)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("starcoder2-3b", smoke=True)
+    api = model_api(cfg)
+    return cfg, api.init_params(KEY)
+
+
+def _traffic(factor, slots=2, step_cost_s=0.02, **kw):
+    base = dict(duration_s=1.5, seed=0, max_prompt_len=8, max_gen_len=8,
+                prompt_len_log_mean=0.8, prompt_len_log_sigma=0.5,
+                gen_len_log_mean=1.0, gen_len_log_sigma=0.5)
+    base.update(kw)
+    rate = overload_rate_rps(factor, slots, step_cost_s,
+                             TrafficConfig(**base))
+    return TrafficConfig(rate_rps=rate, **base)
+
+
+def _replay(cfg, params, factor, **engine_kw):
+    clock = VirtualClock()
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, clock=clock,
+                      policy="priority", max_pending=6, **engine_kw)
+    events = TrafficGenerator(_traffic(factor)).events()
+    return LoadHarness(eng, clock, step_cost_s=0.02).replay(events)
+
+
+# ---- clock injection (engine-level) ------------------------------------------
+
+def test_engine_clock_injection_exact_ttft(dense):
+    """With a virtual clock, latency telemetry is exact, not approximate."""
+    cfg, params = dense
+    clock = VirtualClock()
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, clock=clock)
+    req = Request(uid=0, prompt=[5, 6], max_new_tokens=3)
+    eng.submit(req)
+    assert req.submit_t == 0.0
+    clock.advance(1.5)
+    eng.step()       # absorbs the prompt + one decode: tokens 1 and 2
+    assert req.first_token_t == 1.5
+    assert req.ttft_s == 1.5                    # exact equality: virtual time
+    assert eng.stats.ttft_s == [1.5]
+    clock.advance(0.25)
+    eng.step()       # token 3 -> done
+    stats = eng.run_until_drained()
+    assert req.finish_t == 1.75
+    assert stats.ttft_s == [1.5]
+
+
+def test_harness_requires_matching_clock(dense):
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, slots=1, max_len=16)   # wall clock
+    with pytest.raises(ValueError):
+        LoadHarness(eng, VirtualClock())
+
+
+# ---- deterministic replay ----------------------------------------------------
+
+def test_replay_metrics_bit_deterministic(dense):
+    cfg, params = dense
+    a = _replay(cfg, params, 2.0)
+    b = _replay(cfg, params, 2.0)
+    da, db = a.to_dict(), b.to_dict()
+    da.pop("wall_s"), db.pop("wall_s")          # only wall time may differ
+    assert da == db
+    assert a.ttft_p50_s is not None and a.ttft_p99_s is not None
+    assert a.ttft_p50_s <= a.ttft_p99_s
+
+
+def test_overload_monotonically_increases_shedding(dense):
+    cfg, params = dense
+    light = _replay(cfg, params, 1.0)
+    heavy = _replay(cfg, params, 4.0)
+    assert heavy.n_events > light.n_events
+    assert heavy.shed_rate > light.shed_rate
+    assert heavy.shed_rate > 0.3                # 4x offered load must shed
+    # priority shedding protects the top tier: HIGH sheds no more often
+    # than LOW in absolute count under heavy overload
+    assert heavy.shed_by_priority["HIGH"] <= heavy.shed_by_priority["LOW"] \
+        + heavy.shed_by_priority["NORMAL"]
+
+
+def test_accounting_adds_up_and_no_token_loss(dense):
+    cfg, params = dense
+    m = _replay(cfg, params, 2.0)
+    assert m.completed + m.truncated + m.shed == m.n_events
+    assert m.tokens_generated > 0
+    assert m.tokens_per_s == pytest.approx(
+        m.tokens_generated / m.elapsed_virtual_s)
+    assert 0.0 <= m.shed_rate <= 1.0
+    assert isinstance(m, TrafficMetrics)
+
+
+def test_completed_requests_receive_full_budget(dense):
+    """Load shedding must never clip a request it admitted and completed."""
+    cfg, params = dense
+    clock = VirtualClock()
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, clock=clock,
+                      policy="priority", max_pending=6)
+    events = TrafficGenerator(_traffic(2.0)).events()
+    h = LoadHarness(eng, clock, step_cost_s=0.02)
+    h.replay(events)
+    completed = [r for r in h.requests if r.done and not r.shed
+                 and not r.truncated]
+    assert completed
+    for r in completed:
+        assert len(r.out_tokens) == r.max_new_tokens
+    for r in h.requests:
+        if r.shed:
+            assert r.out_tokens == []           # shed before any decode

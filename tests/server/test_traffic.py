@@ -1,0 +1,101 @@
+"""Traffic generator: determinism under seed, distribution shape, diurnal
+envelope, trace-file round-trips, and config validation (no jax)."""
+
+import io
+
+import numpy as np
+import pytest
+
+from repro.serve import Priority
+from repro.server import (TraceEvent, TrafficConfig, TrafficGenerator,
+                          load_trace, save_trace)
+
+
+def _cfg(**kw):
+    base = dict(rate_rps=20.0, duration_s=10.0, seed=7)
+    base.update(kw)
+    return TrafficConfig(**base)
+
+
+def test_same_seed_same_trace_different_seed_different():
+    a = TrafficGenerator(_cfg()).events()
+    b = TrafficGenerator(_cfg()).events()
+    c = TrafficGenerator(_cfg(seed=8)).events()
+    assert a == b
+    assert a != c
+
+
+def test_arrivals_sorted_within_horizon_and_poisson_scale():
+    cfg = _cfg()
+    ev = TrafficGenerator(cfg).events()
+    ts = [e.t_s for e in ev]
+    assert ts == sorted(ts)
+    assert all(0 <= t < cfg.duration_s for t in ts)
+    # law of large numbers: ~rate * duration arrivals (+-40%)
+    expected = cfg.rate_rps * cfg.duration_s
+    assert 0.6 * expected < len(ev) < 1.4 * expected
+
+
+def test_lengths_clipped_and_heavy_tailed():
+    cfg = _cfg(max_prompt_len=16, max_gen_len=12)
+    ev = TrafficGenerator(cfg).events()
+    plens = np.asarray([len(e.prompt) for e in ev])
+    glens = np.asarray([e.max_new_tokens for e in ev])
+    assert plens.min() >= 1 and plens.max() <= 16
+    assert glens.min() >= 1 and glens.max() <= 12
+    # heavy tail: mean above median for the lognormal draw
+    assert plens.mean() >= np.median(plens)
+
+
+def test_priority_mix_and_per_tier_deadlines():
+    cfg = _cfg(priority_weights=(0.0, 0.0, 1.0),
+               deadline_s=(None, 2.0, 0.5))
+    ev = TrafficGenerator(cfg).events()
+    assert ev and all(e.priority is Priority.HIGH for e in ev)
+    assert all(e.deadline_s == 0.5 for e in ev)
+    cfg = _cfg(priority_weights=(1.0, 0.0, 0.0), deadline_s=(None, 2.0, 0.5))
+    ev = TrafficGenerator(cfg).events()
+    assert ev and all(e.deadline_s is None for e in ev)
+
+
+def test_diurnal_envelope_modulates_arrival_density():
+    # amplitude 1 with period == duration: first half boosted, second half
+    # suppressed (sin is positive then negative)
+    cfg = _cfg(rate_rps=40.0, duration_s=20.0, diurnal_amplitude=1.0,
+               diurnal_period_s=20.0)
+    ev = TrafficGenerator(cfg).events()
+    half = cfg.duration_s / 2
+    first = sum(1 for e in ev if e.t_s < half)
+    second = len(ev) - first
+    assert first > 2 * second
+
+
+def test_trace_roundtrip_through_file(tmp_path):
+    ev = TrafficGenerator(_cfg(duration_s=2.0)).events()
+    path = str(tmp_path / "trace.ndjson")
+    save_trace(ev, path)
+    assert load_trace(path) == ev
+    buf = io.StringIO()
+    save_trace(ev, buf)
+    buf.seek(0)
+    assert load_trace(buf) == ev
+
+
+def test_trace_event_to_request_carries_qos():
+    ev = TraceEvent(t_s=0.5, uid=3, prompt=[4, 5], max_new_tokens=6,
+                    priority=Priority.HIGH, deadline_s=0.25)
+    req = ev.to_request()
+    assert req.uid == 3 and req.prompt == [4, 5]
+    assert req.max_new_tokens == 6
+    assert req.priority is Priority.HIGH and req.deadline_s == 0.25
+
+
+@pytest.mark.parametrize("bad", [
+    dict(rate_rps=0.0),
+    dict(duration_s=-1.0),
+    dict(diurnal_amplitude=1.5),
+    dict(priority_weights=(0.5, 0.5, 0.5)),
+])
+def test_config_validation(bad):
+    with pytest.raises(ValueError):
+        _cfg(**bad)
