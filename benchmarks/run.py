@@ -618,7 +618,41 @@ def bench_accuracy_voltage(fast: bool) -> List[Tuple[str, float, str]]:
     return out
 
 
+def bench_analysis(fast: bool) -> List[Tuple[str, float, str]]:
+    """jaxpr census over the family configs: host round-trips (pure_callback),
+    dot count and flop estimate per model call under reference routing —
+    ROADMAP item 1's worklist, written to BENCH_analysis.json and pinned by
+    the lint-invariants CI gate."""
+    from repro.analysis import CENSUS_ARCHS, census_config
+
+    archs = CENSUS_ARCHS[:2] if fast else list(CENSUS_ARCHS)
+    out: List[Tuple[str, float, str]] = []
+    configs: Dict[str, Dict] = {}
+    t_all = time.perf_counter()
+    for arch in archs:
+        t0 = time.perf_counter()
+        report = census_config(arch, backend="reference")
+        us = (time.perf_counter() - t0) * 1e6
+        configs[arch] = report
+        for phase in ("prefill", "decode"):
+            c = report.get(phase)
+            if c is None:
+                continue
+            out.append((
+                f"analysis/{arch}_{phase}", us,
+                f"callbacks={c['pure_callbacks']}_dots={c['dots']}"
+                f"_flops={c['flops']:.3e}"))
+    payload = bench_payload(
+        "analysis", time.perf_counter() - t_all,
+        {"archs": archs, "backend": "reference"},
+        census=configs)
+    with open(_json_path("BENCH_analysis.json"), "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return out
+
+
 BENCHES: Dict[str, Callable] = {
+    "analysis": bench_analysis,
     "tableII": bench_tableII,
     "fig15_16": bench_fig15_16,
     "clustering": bench_clustering,

@@ -1,0 +1,33 @@
+"""repro.analysis — static guards for the repo's cross-cutting invariants.
+
+Two layers:
+
+* **Invariant linter** (:mod:`.rules` + :mod:`.checker`): AST-based,
+  repo-specific rules (RP001..RP006) that pin the load-bearing conventions
+  established by earlier PRs — every dense GEMM routes through
+  ``backend.matmul``, one pump thread owns every jax call in the server,
+  wall-clock reads go through injectable ``clock=``, Pallas block shapes
+  come from ``kernels.tuning`` tables.  Violations carry a fix-hint and can
+  be silenced either inline (``# lint: allow=RP001 <reason>``) or via a
+  checked-in JSON baseline.
+
+* **jaxpr census** (:mod:`.jaxpr`): traces each config's ``ModelAPI``
+  prefill/decode closed jaxpr and inventories ``pure_callback`` host
+  round-trips, dot ops, flop estimates and dtype flow per decode step —
+  the ground-truth worklist for ROADMAP item 1 (device-resident fault
+  injection), pinned by CI so new host round-trips fail loudly.
+
+CLI: ``python -m repro.analysis lint src/`` and
+``python -m repro.analysis census``.
+"""
+
+from .findings import Finding, load_baseline, write_baseline  # noqa: F401
+from .checker import lint_file, lint_paths  # noqa: F401
+from .rules import RULES, rule_codes  # noqa: F401
+from .jaxpr import (  # noqa: F401
+    CENSUS_ARCHS,
+    census,
+    census_config,
+    check_census,
+    trace_counts,
+)

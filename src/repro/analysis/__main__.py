@@ -1,0 +1,126 @@
+"""CLI for the static-analysis subsystem.
+
+::
+
+    python -m repro.analysis lint src/ [--baseline lint_baseline.json]
+    python -m repro.analysis lint src/ --write-baseline   # absorb current
+    python -m repro.analysis rules                        # list rule codes
+    python -m repro.analysis census [--json out.json] [--check baseline]
+    python -m repro.analysis census --write-baseline      # repin counts
+
+``lint`` exits 1 on any finding not covered by an inline
+``# lint: allow=RPxxx`` marker or the baseline.  ``census --check`` exits 1
+when any config's ``pure_callback`` count rose above its pin (or its dot
+census drifted without a deliberate repin).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .checker import DEFAULT_BASELINE, lint_paths
+from .findings import write_baseline
+from .jaxpr import (CENSUS_ARCHS, census, check_census, load_census,
+                    write_census)
+from .rules import RULES
+
+CENSUS_BASELINE = "census_baseline.json"
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root is three levels above src/
+    return Path(__file__).resolve().parents[3]
+
+
+def _cmd_lint(args: argparse.Namespace) -> int:
+    root = _repo_root()
+    paths = [Path(p) for p in args.paths] or [root / "src"]
+    baseline = None if args.no_baseline else Path(args.baseline)
+    if args.write_baseline:
+        all_findings, _ = lint_paths(paths, root=root, baseline_path=None)
+        write_baseline(all_findings, Path(args.baseline))
+        print(f"wrote {len(all_findings)} finding(s) to {args.baseline}")
+        return 0
+    fresh, absorbed = lint_paths(paths, root=root, baseline_path=baseline)
+    for f in fresh:
+        print(f.format())
+    tail = f" ({absorbed} baselined)" if absorbed else ""
+    if fresh:
+        print(f"\n{len(fresh)} finding(s){tail}")
+        return 1
+    print(f"clean{tail}")
+    return 0
+
+
+def _cmd_rules(_args: argparse.Namespace) -> int:
+    for r in RULES:
+        scope = "/".join(r.scopes) or "src"
+        print(f"{r.code}  [{scope}]  {r.description}\n    fix: {r.fix_hint}")
+    return 0
+
+
+def _cmd_census(args: argparse.Namespace) -> int:
+    archs = args.arch or list(CENSUS_ARCHS)
+    report = census(archs, backend=args.backend)
+    if args.json:
+        write_census(report, Path(args.json))
+        print(f"census written to {args.json}")
+    if args.write_baseline:
+        write_census(report, Path(args.baseline))
+        print(f"baseline repinned at {args.baseline}")
+        return 0
+    for arch, cfg in report["configs"].items():
+        for phase in ("prefill", "decode"):
+            c = cfg.get(phase)
+            if c is None:
+                continue
+            print(f"{arch:24s} {phase:7s} callbacks={c['pure_callbacks']:5d} "
+                  f"dots={c['dots']:5d} flops={c['flops']:.3e} "
+                  f"dtypes={c['dot_dtypes']}")
+    if args.check:
+        problems = check_census(report, load_census(Path(args.check)))
+        for p in problems:
+            print(f"CENSUS GATE: {p}")
+        if problems:
+            return 1
+        print("census gate: OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    lint = sub.add_parser("lint", help="run the invariant linter")
+    lint.add_argument("paths", nargs="*", help="files or trees (default src/)")
+    lint.add_argument("--baseline", default=str(_repo_root() / DEFAULT_BASELINE))
+    lint.add_argument("--no-baseline", action="store_true")
+    lint.add_argument("--write-baseline", action="store_true",
+                      help="absorb every current finding into the baseline")
+    lint.set_defaults(fn=_cmd_lint)
+
+    rules = sub.add_parser("rules", help="list rule codes and fix hints")
+    rules.set_defaults(fn=_cmd_rules)
+
+    cen = sub.add_parser("census", help="jaxpr host-round-trip census")
+    cen.add_argument("--arch", action="append",
+                     help="config name (repeatable; default: one per family)")
+    cen.add_argument("--backend", default="reference",
+                     help="backend scope to trace under (default reference — "
+                          "the host-callback path the census inventories)")
+    cen.add_argument("--json", help="write the full census report here")
+    cen.add_argument("--check", help="baseline to gate against")
+    cen.add_argument("--baseline",
+                     default=str(_repo_root() / CENSUS_BASELINE))
+    cen.add_argument("--write-baseline", action="store_true")
+    cen.set_defaults(fn=_cmd_census)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

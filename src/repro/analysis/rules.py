@@ -1,0 +1,377 @@
+"""Repo-specific invariant rules (RP001..RP006).
+
+Each rule pins a convention an earlier PR made load-bearing:
+
+========  ====================================================================
+RP001     Dense GEMMs in ``models/`` must route through ``backend.matmul``
+          (PR 5) — a direct ``jnp.dot``/``@``/``lax.dot_general``/weight
+          ``einsum`` silently runs ideal and skips fault injection.
+RP002     Only the pump thread may touch jax in ``server/`` (PR 6) — jax
+          calls inside ``async def`` handlers run on the event loop and
+          deadlock or stall streaming.
+RP003     Wall-clock reads in ``serve/``/``server/``/``hwloop/`` must go
+          through the injectable ``clock=`` seam — direct ``time.*()`` calls
+          break the virtual-time ``LoadHarness``.
+RP004     No unseeded global ``np.random`` — deterministic harness/oracle
+          paths must thread an explicit ``np.random.default_rng(seed)``.
+RP005     No mutable default arguments.
+RP006     Pallas block/chunk shapes in ``kernels/`` come from
+          ``tuning.BLOCK_TABLE``/``CHUNK_TABLE`` (literal defaults bypass
+          the tables and break divisibility on off-table shapes).
+========  ====================================================================
+
+Rules are conservative by design: the RP001 einsum check only fires when an
+operand is a subscript expression (``p["w1"]`` — a parameter leaf), so
+activation-activation contractions (attention scores, SSM scans) pass
+without annotation.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+
+# ---- shared AST helpers -----------------------------------------------------
+
+
+def build_import_table(tree: ast.AST) -> Dict[str, str]:
+    """Map local alias -> canonical dotted origin.
+
+    ``import jax.numpy as jnp``       -> {"jnp": "jax.numpy", "jax": "jax"}
+    ``import time as _time``          -> {"_time": "time"}
+    ``from time import perf_counter`` -> {"perf_counter": "time.perf_counter"}
+    ``from jax import lax``           -> {"lax": "jax.lax"}
+    """
+    table: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                local = alias.asname or alias.name.split(".")[0]
+                table[local] = alias.name if alias.asname \
+                    else alias.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                table[alias.asname or alias.name] = \
+                    f"{node.module}.{alias.name}"
+    return table
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute chain as a dotted string, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def canonical(node: ast.AST, imports: Dict[str, str]) -> Optional[str]:
+    """Dotted name with its head resolved through the import table."""
+    name = dotted_name(node)
+    if name is None:
+        return None
+    head, _, rest = name.partition(".")
+    origin = imports.get(head, head)
+    return f"{origin}.{rest}" if rest else origin
+
+
+@dataclass
+class RuleContext:
+    """Per-file state shared by every rule."""
+
+    path: str                       # repo-relative, posix
+    tree: ast.AST
+    imports: Dict[str, str]
+    lines: Sequence[str]            # raw source lines (0-based)
+    segments: Tuple[str, ...] = ()  # path split on "/"
+
+    def __post_init__(self) -> None:
+        self.segments = tuple(self.path.split("/"))
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+
+@dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    scopes: Tuple[str, ...]         # path segments; empty = everywhere
+    fix_hint: str
+    description: str
+    check: Callable[[RuleContext], List[Finding]]
+
+    def applies_to(self, ctx: RuleContext) -> bool:
+        return not self.scopes or any(s in ctx.segments for s in self.scopes)
+
+
+def _finding(rule: "Rule", ctx: RuleContext, node: ast.AST,
+             message: str) -> Finding:
+    line = getattr(node, "lineno", 1)
+    return Finding(code=rule.code, path=ctx.path, line=line,
+                   col=getattr(node, "col_offset", 0), message=message,
+                   fix_hint=rule.fix_hint, line_text=ctx.line_text(line))
+
+
+# ---- RP001: dense GEMM bypassing backend.matmul ----------------------------
+
+_GEMM_CALLS = {
+    "jax.numpy.dot", "jax.numpy.matmul", "jax.numpy.tensordot",
+    "numpy.dot", "numpy.matmul", "numpy.tensordot",
+    "jax.lax.dot", "jax.lax.dot_general", "jax.lax.batch_matmul",
+}
+_EINSUM_CALLS = {"jax.numpy.einsum", "numpy.einsum"}
+
+
+def _check_rp001(ctx: RuleContext) -> List[Finding]:
+    rule = RP001
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+            out.append(_finding(rule, ctx, node,
+                                "matrix product via `@` bypasses the "
+                                "backend router"))
+        elif isinstance(node, ast.Call):
+            name = canonical(node.func, ctx.imports)
+            if name in _GEMM_CALLS:
+                out.append(_finding(
+                    rule, ctx, node,
+                    f"direct `{name}` bypasses the backend router"))
+            elif name in _EINSUM_CALLS:
+                # weight GEMM heuristic: an operand that *is or contains* a
+                # subscript (p["w1"]) is a parameter leaf — contraction
+                # against it is a dense GEMM; activation einsums pass
+                operands = node.args[1:] if node.args else []
+                if any(isinstance(sub, ast.Subscript)
+                       for arg in operands for sub in ast.walk(arg)):
+                    out.append(_finding(
+                        rule, ctx, node,
+                        "einsum contracts a parameter leaf (subscripted "
+                        "operand) outside the backend router"))
+    return out
+
+
+RP001 = Rule(
+    code="RP001", name="gemm-bypasses-backend", scopes=("models",),
+    fix_hint="route through repro.backend.matmul (`from ..backend import "
+             "matmul as bmm`) so non-ideal backends see this GEMM; "
+             "ideal-only branches need `# lint: allow=RP001 <reason>`",
+    description="dense GEMM in models/ bypassing backend.matmul",
+    check=_check_rp001,
+)
+
+
+# ---- RP002: jax calls inside asyncio handlers ------------------------------
+
+
+def _check_rp002(ctx: RuleContext) -> List[Finding]:
+    rule = RP002
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.AsyncFunctionDef):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                name = canonical(sub.func, ctx.imports)
+                if name and (name == "jax" or name.startswith("jax.")):
+                    out.append(_finding(
+                        rule, ctx, sub,
+                        f"`{name}` called inside async handler "
+                        f"`{node.name}` — jax belongs to the pump thread"))
+    return out
+
+
+RP002 = Rule(
+    code="RP002", name="jax-in-async-handler", scopes=("server",),
+    fix_hint="hand work to the pump thread via the scheduler queue "
+             "(Request callbacks + loop.call_soon_threadsafe); the event "
+             "loop must only parse and stream",
+    description="jax/jnp call reachable from an asyncio handler in server/",
+    check=_check_rp002,
+)
+
+
+# ---- RP003: direct wall-clock reads ----------------------------------------
+
+_CLOCK_CALLS = {"time.time", "time.monotonic", "time.perf_counter",
+                "time.process_time"}
+
+
+def _check_rp003(ctx: RuleContext) -> List[Finding]:
+    rule = RP003
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            name = canonical(node.func, ctx.imports)
+            if name in _CLOCK_CALLS:
+                out.append(_finding(
+                    rule, ctx, node,
+                    f"direct `{name}()` read bypasses the injectable "
+                    f"clock seam"))
+    return out
+
+
+RP003 = Rule(
+    code="RP003", name="uninjected-wall-clock",
+    scopes=("serve", "server", "hwloop"),
+    fix_hint="accept `clock=time.monotonic` (a reference, not a call) as a "
+             "parameter and read `self._clock()` so VirtualClock/LoadHarness "
+             "can substitute virtual time",
+    description="direct time.time/monotonic/perf_counter call in timed paths",
+    check=_check_rp003,
+)
+
+
+# ---- RP004: unseeded global np.random --------------------------------------
+
+_SEEDED_FACTORIES = {"default_rng", "Generator", "RandomState",
+                     "SeedSequence", "PCG64", "Philox"}
+
+
+def _check_rp004(ctx: RuleContext) -> List[Finding]:
+    rule = RP004
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            name = canonical(node.func, ctx.imports)
+            if name and name.startswith("numpy.random.") \
+                    and name.rsplit(".", 1)[1] not in _SEEDED_FACTORIES:
+                out.append(_finding(
+                    rule, ctx, node,
+                    f"global `{name}()` draws from hidden process-wide "
+                    f"state"))
+    return out
+
+
+RP004 = Rule(
+    code="RP004", name="unseeded-global-random", scopes=(),
+    fix_hint="thread an explicit `np.random.default_rng(seed)` Generator "
+             "through the call path (harness/oracle runs must replay "
+             "bit-exactly)",
+    description="unseeded global np.random call",
+    check=_check_rp004,
+)
+
+
+# ---- RP005: mutable default arguments --------------------------------------
+
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+_MUTABLE_CALLS = {"list", "dict", "set", "bytearray",
+                  "collections.defaultdict", "collections.deque",
+                  "collections.Counter", "collections.OrderedDict"}
+
+
+def _is_mutable_default(node: ast.AST, imports: Dict[str, str]) -> bool:
+    if isinstance(node, _MUTABLE_LITERALS):
+        return True
+    if isinstance(node, ast.Call):
+        name = canonical(node.func, imports)
+        return name in _MUTABLE_CALLS
+    return False
+
+
+def _check_rp005(ctx: RuleContext) -> List[Finding]:
+    rule = RP005
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        a = node.args
+        pos = list(a.posonlyargs) + list(a.args)
+        for arg, default in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+            if _is_mutable_default(default, ctx.imports):
+                out.append(_finding(
+                    rule, ctx, default,
+                    f"mutable default for `{arg.arg}` in `{node.name}` is "
+                    f"shared across calls"))
+        for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+            if default is not None and \
+                    _is_mutable_default(default, ctx.imports):
+                out.append(_finding(
+                    rule, ctx, default,
+                    f"mutable default for `{arg.arg}` in `{node.name}` is "
+                    f"shared across calls"))
+    return out
+
+
+RP005 = Rule(
+    code="RP005", name="mutable-default-arg", scopes=(),
+    fix_hint="default to None and materialize inside the function body",
+    description="mutable default argument",
+    check=_check_rp005,
+)
+
+
+# ---- RP006: hard-coded Pallas block/chunk shapes ---------------------------
+
+_TUNED_PARAMS = {"block_m", "block_n", "block_k", "block", "chunk",
+                 "chunk_q", "chunk_k"}
+_BLOCKSPEC = {"jax.experimental.pallas.BlockSpec"}
+
+
+def _literal_over_one(elt: ast.AST) -> bool:
+    return isinstance(elt, ast.Constant) and isinstance(elt.value, int) \
+        and not isinstance(elt.value, bool) and elt.value > 1
+
+
+def _check_rp006(ctx: RuleContext) -> List[Finding]:
+    rule = RP006
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = node.args
+            pos = list(a.posonlyargs) + list(a.args)
+            pairs = list(zip(pos[len(pos) - len(a.defaults):], a.defaults))
+            pairs += [(arg, d) for arg, d in zip(a.kwonlyargs, a.kw_defaults)
+                      if d is not None]
+            for arg, default in pairs:
+                if arg.arg in _TUNED_PARAMS and \
+                        isinstance(default, ast.Constant) and \
+                        isinstance(default.value, int) and \
+                        not isinstance(default.value, bool):
+                    out.append(_finding(
+                        rule, ctx, default,
+                        f"`{node.name}` pins `{arg.arg}={default.value}` — "
+                        f"a literal default bypasses the tuning tables and "
+                        f"breaks divisibility on off-table shapes"))
+        elif isinstance(node, ast.Call):
+            name = canonical(node.func, ctx.imports)
+            if name in _BLOCKSPEC and node.args:
+                shape = node.args[0]
+                if isinstance(shape, (ast.Tuple, ast.List)) and \
+                        any(_literal_over_one(e) for e in shape.elts):
+                    out.append(_finding(
+                        rule, ctx, node,
+                        "BlockSpec hard-codes a block edge > 1 — take it "
+                        "from tuning.select_blocks/select_chunk (scalar "
+                        "`(1, 1)` accumulator tiles are fine)"))
+    return out
+
+
+RP006 = Rule(
+    code="RP006", name="hardcoded-pallas-blocks", scopes=("kernels",),
+    fix_hint="default block/chunk params to None and resolve via "
+             "tuning.select_blocks/select_chunk (BLOCK_TABLE/CHUNK_TABLE), "
+             "then assert divisibility with tuning.assert_divides",
+    description="Pallas BlockSpec/grid shape bypassing tuning tables",
+    check=_check_rp006,
+)
+
+
+RULES: Tuple[Rule, ...] = (RP001, RP002, RP003, RP004, RP005, RP006)
+
+
+def rule_codes() -> List[str]:
+    return [r.code for r in RULES]

@@ -23,7 +23,7 @@ from .razor_matmul import razor_matmul
 from .ssd_chunk import ssd_chunk
 from .systolic_mac import systolic_mac
 from .tuning import default_interpret as _default_interpret
-from .tuning import select_blocks, select_chunk
+from .tuning import select_blocks, select_chunk, select_square_block
 from .wkv6 import wkv6
 
 # Every kernel now resolves ``interpret=None`` through
@@ -44,11 +44,11 @@ def precision_mm(a, b, tiers, **kw):
     return precision_island(a, b, tiers, **kw)
 
 
-def wkv6_op(r, k, v, w_log, u, state, chunk: int = 64, **kw):
+def wkv6_op(r, k, v, w_log, u, state, chunk: Optional[int] = None, **kw):
     return wkv6(r, k, v, w_log, u, state, chunk=chunk, **kw)
 
 
-def ssd_op(x, dt, A_log, B, C, D, state, chunk: int = 64, **kw):
+def ssd_op(x, dt, A_log, B, C, D, state, chunk: Optional[int] = None, **kw):
     return ssd_chunk(x, dt, A_log, B, C, D, state, chunk=chunk, **kw)
 
 
@@ -57,7 +57,8 @@ def ssd_op(x, dt, A_log, B, C, D, state, chunk: int = 64, **kw):
 # ---------------------------------------------------------------------------
 
 
-def voltage_scaled_matmul(a: jax.Array, b: jax.Array, *, block: int = 128,
+def voltage_scaled_matmul(a: jax.Array, b: jax.Array, *,
+                          block: Optional[int] = None,
                           n_partitions: int = 4,
                           v_min: float = 1.0, v_crash: float = 0.7,
                           interpret: Optional[bool] = None
@@ -79,6 +80,7 @@ def voltage_scaled_matmul(a: jax.Array, b: jax.Array, *, block: int = 128,
     interpret = _default_interpret() if interpret is None else interpret
     m, k = a.shape
     _, n = b.shape
+    block = select_square_block(m, n) if block is None else block
     gm, gn = m // block, n // block
 
     head = tile_headroom(np.asarray(b, np.float32), tile=k)  # (1, gn) over cols

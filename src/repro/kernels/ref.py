@@ -6,10 +6,12 @@ reproduce these bit-for-bit up to dtype tolerance.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from .tuning import select_square_block
 
 EXP_CLAMP = 30.0
 
@@ -28,7 +30,7 @@ def corrupt_low_bits(x: jax.Array, keep_bits: int = 8) -> jax.Array:
 
 
 def systolic_mac(a: jax.Array, b: jax.Array, v_map: jax.Array,
-                 v_safe: jax.Array, block: int = 128,
+                 v_safe: jax.Array, block: Optional[int] = None,
                  keep_bits: int = 8) -> Tuple[jax.Array, jax.Array]:
     """C = a @ b on a voltage-island-partitioned MAC grid.
 
@@ -38,6 +40,7 @@ def systolic_mac(a: jax.Array, b: jax.Array, v_map: jax.Array,
     """
     m, k = a.shape
     k2, n = b.shape
+    block = select_square_block(m, n) if block is None else block
     assert k == k2 and m % block == 0 and n % block == 0
     c = (a.astype(jnp.float32) @ b.astype(jnp.float32))
     gm, gn = m // block, n // block
@@ -62,7 +65,8 @@ def quantize_sym_i8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 def razor_matmul(a: jax.Array, b: jax.Array, tol: float = 0.05,
-                 block: int = 128) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                 block: Optional[int] = None
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Razor-style double-sampled matmul.
 
     Main path: int8xint8->int32 (the near-threshold 'fast but risky' path).
@@ -73,6 +77,7 @@ def razor_matmul(a: jax.Array, b: jax.Array, tol: float = 0.05,
     """
     m, k = a.shape
     _, n = b.shape
+    block = select_square_block(m, n) if block is None else block
     assert m % block == 0 and n % block == 0
     qa, sa = quantize_sym_i8(a)                       # (m,k), (m,1)
     qb, sb = quantize_sym_i8(b.T)                     # (n,k), (n,1)
@@ -117,12 +122,13 @@ def _tile_matmul_at_tier(at: jax.Array, bt: jax.Array, tier: jax.Array):
 
 
 def precision_island(a: jax.Array, b: jax.Array, tiers: jax.Array,
-                     block: int = 128) -> jax.Array:
+                     block: Optional[int] = None) -> jax.Array:
     """C = a @ b where each (block x block) output tile computes at its
     assigned tier (0=int4, 1=int8, 2=full f32) — the TPU analogue of
     per-partition V_ccint (DESIGN.md Sec. 2b)."""
     m, k = a.shape
     _, n = b.shape
+    block = select_square_block(m, n) if block is None else block
     gm, gn = m // block, n // block
     rows = []
     for i in range(gm):

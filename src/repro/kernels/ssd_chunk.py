@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .tuning import resolve_interpret, select_chunk
+from .tuning import assert_divides, resolve_interpret, select_chunk
 
 EXP_CLAMP = 30.0
 
@@ -68,7 +68,7 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, alog_ref, d_ref, s0_ref,
 
 def ssd_chunk(x: jax.Array, dt: jax.Array, A_log: jax.Array, B: jax.Array,
               C: jax.Array, D: jax.Array, state: jax.Array, *,
-              chunk: Optional[int] = 64, interpret: Optional[bool] = None):
+              chunk: Optional[int] = None, interpret: Optional[bool] = None):
     """x: (b, s, h, p); dt: (b, s, h); A_log, D: (h,); B, C: (b, s, n);
     state: (b, h, n, p).  Returns (y (b, s, h, p), final_state).
 
@@ -85,7 +85,7 @@ def _ssd_chunk_call(x: jax.Array, dt: jax.Array, A_log: jax.Array,
                     state: jax.Array, *, chunk: int, interpret: bool):
     b, s, h, p = x.shape
     n = B.shape[-1]
-    assert s % chunk == 0
+    assert_divides(chunk, s, "ssd_chunk sequence chunk")
     nc = s // chunk
     bh = b * h
 

@@ -102,3 +102,32 @@ def select_blocks(m: int, n: int, k: Optional[int] = None,
 def select_chunk(seq_len: int, prefs: Sequence[int] = CHUNK_TABLE) -> int:
     """Largest preferred chunk length dividing ``seq_len``."""
     return _pick(seq_len, prefs)
+
+
+def select_square_block(*dims: int,
+                        prefs: Optional[Sequence[int]] = None) -> int:
+    """Largest preferred block edge dividing *every* given dim.
+
+    The square-tile analogue of :func:`select_blocks` for callers whose tile
+    grid must share one edge across axes (voltage maps, flag grids, the
+    pure-jnp oracles).  Falls back to the gcd of the dims when no table
+    entry divides them all, so the result always tiles exactly.
+    """
+    import math
+
+    prefs = BLOCK_TABLE["m"] if prefs is None else prefs
+    for b in prefs:
+        if all(b <= d and d % b == 0 for d in dims):
+            return b
+    g = 0
+    for d in dims:
+        g = math.gcd(g, d)
+    return max(g, 1)
+
+
+def assert_divides(block: int, dim: int, what: str) -> None:
+    """Fail fast (and informatively) when a block does not tile its axis."""
+    if block <= 0 or dim % block != 0:
+        raise ValueError(
+            f"{what}: block {block} does not divide axis of size {dim} — "
+            f"pass block/chunk=None to pick from the tuning tables")

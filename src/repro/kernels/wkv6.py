@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .tuning import resolve_interpret, select_chunk
+from .tuning import assert_divides, resolve_interpret, select_chunk
 
 EXP_CLAMP = 60.0
 
@@ -73,7 +73,7 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
 
 
 def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
-         u: jax.Array, state: jax.Array, *, chunk: Optional[int] = 64,
+         u: jax.Array, state: jax.Array, *, chunk: Optional[int] = None,
          interpret: Optional[bool] = None):
     """r,k,v,w_log: (b, s, h, p) f32; u: (h, p); state: (b, h, p, p).
 
@@ -92,7 +92,7 @@ def _wkv6_call(r: jax.Array, k: jax.Array, v: jax.Array, w_log: jax.Array,
                u: jax.Array, state: jax.Array, *, chunk: int,
                interpret: bool):
     b, s, h, p = r.shape
-    assert s % chunk == 0
+    assert_divides(chunk, s, "wkv6 sequence chunk")
     nc = s // chunk
     bh = b * h
 

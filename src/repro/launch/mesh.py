@@ -19,18 +19,28 @@ ICI_LINK_BW = 50e9                # B/s per link
 ICI_LINKS_PER_CHIP = 3            # usable torus links on a 16x16 slice
 
 
+def _make_mesh(shape: Tuple[int, ...],
+               axes: Tuple[str, ...]) -> jax.sharding.Mesh:
+    # jax >= 0.5 wants explicit axis_types (Auto keeps the pre-explicit
+    # sharding semantics); 0.4.x predates jax.sharding.AxisType and rejects
+    # the kwarg, so gate on the attribute
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
                    axes: Tuple[str, ...] = ("data", "model")) -> jax.sharding.Mesh:
     """Small mesh over however many (fake) devices the test process has."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def rules_for_mesh(mesh: jax.sharding.Mesh,

@@ -428,8 +428,9 @@ def moe_dense(x: jax.Array, p: Params, cfg: ModelConfig) -> jax.Array:
     gates = jnp.zeros((t, cfg.n_experts), jnp.float32)
     gates = gates.at[jnp.arange(t)[:, None], idx].set(w)      # (t, E)
     if current_backend().is_ideal:
+        # lint: allow=RP001 ideal-only fast path; non-ideal branch below bmm's
         up = lambda wkey: jnp.einsum("td,edf->etf", xt, p[wkey])
-        down = lambda h: jnp.einsum("etf,efd->etd", h, p["w2"])
+        down = lambda h: jnp.einsum("etf,efd->etd", h, p["w2"])  # lint: allow=RP001 ideal-only
     else:
         # per-expert GEMMs through the active backend (E dense matmuls)
         up = lambda wkey: jnp.stack(
@@ -444,6 +445,20 @@ def moe_dense(x: jax.Array, p: Params, cfg: ModelConfig) -> jax.Array:
     y = down(h)                                               # (E, t, d)
     out = jnp.einsum("etd,te->td", y, gates.astype(y.dtype))
     return out.reshape(b, s, d)
+
+
+def _shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """shard_map with replication/vma checking off, across jax versions:
+    jax >= 0.6 exports ``jax.shard_map`` (``check_vma=``), 0.4.x only has
+    the experimental module (``check_rep=``)."""
+    try:
+        from jax import shard_map
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
 
 
 def moe_ep_a2a(x: jax.Array, p: Params, cfg: ModelConfig) -> jax.Array:
@@ -512,19 +527,17 @@ def moe_ep_a2a(x: jax.Array, p: Params, cfg: ModelConfig) -> jax.Array:
         out = (out_tk * wgt[..., None].astype(out_tk.dtype)).sum(1)
         return out.reshape(bl, sl, d)
 
-    from jax import shard_map
     # tokens are partitioned over BOTH the batch (data) and sequence (expert/
     # model) axes before dispatch — otherwise every model-column would
     # redundantly dispatch and compute the same tokens (measured 16x waste;
     # EXPERIMENTS.md §Perf cell D)
-    fn = shard_map(
+    fn = _shard_map_unchecked(
         local, mesh=mesh,
         in_specs=(P(batch_axes, e_axis, None),
                   P(None, None),                 # router replicated locally
                   P(e_axis, None, None), P(e_axis, None, None),
                   P(e_axis, None, None)),
-        out_specs=P(batch_axes, e_axis, None),
-        check_vma=False)
+        out_specs=P(batch_axes, e_axis, None))
     wg = p.get("wg", p["w1"])
     return fn(x, p["router"], wg, p["w1"], p["w2"])
 

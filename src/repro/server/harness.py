@@ -19,7 +19,8 @@ same thing for every engine configuration.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -88,7 +89,8 @@ class LoadHarness:
     """
 
     def __init__(self, engine, clock: VirtualClock,
-                 step_cost_s: float = 0.02):
+                 step_cost_s: float = 0.02,
+                 wall_clock: Callable[[], float] = time.perf_counter):
         if getattr(engine, "_clock", None) is not clock:
             raise ValueError("engine was not built with this harness clock; "
                              "pass ServeEngine(..., clock=clock)")
@@ -97,12 +99,14 @@ class LoadHarness:
         self.engine = engine
         self.clock = clock
         self.step_cost_s = step_cost_s
+        # wall_s telemetry (replay cost, not a serving metric) reads this
+        # injectable second clock so tests can pin it too
+        self.wall_clock = wall_clock
         self.requests: List[Request] = []
 
     def replay(self, events: Sequence[TraceEvent],
                max_steps: int = 1_000_000) -> TrafficMetrics:
-        import time as _time
-        wall0 = _time.perf_counter()
+        wall0 = self.wall_clock()
         eng, clock = self.engine, self.clock
         events = sorted(events, key=lambda e: e.t_s)
         i, n = 0, len(events)
@@ -124,7 +128,7 @@ class LoadHarness:
             # iteration (nothing admissible ran) still advances one tick so
             # queued deadlines keep aging and the loop cannot spin
             clock.advance(max(used, 1) * self.step_cost_s)
-        return self._metrics(events, _time.perf_counter() - wall0, steps)
+        return self._metrics(events, self.wall_clock() - wall0, steps)
 
     def _metrics(self, events: Sequence[TraceEvent], wall_s: float,
                  steps: int) -> TrafficMetrics:

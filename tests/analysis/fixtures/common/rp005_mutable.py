@@ -1,0 +1,10 @@
+"""Fixture: exactly one RP005 violation (mutable default argument)."""
+
+
+def accumulate(x, acc=[]):
+    acc.append(x)
+    return acc
+
+
+def fine(x, acc=None):
+    return (acc or []) + [x]

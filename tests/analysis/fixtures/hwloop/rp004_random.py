@@ -1,0 +1,12 @@
+"""Fixture: exactly one RP004 violation (unseeded global np.random draw);
+the explicit-Generator idiom below is allowed."""
+
+import numpy as np
+
+
+def noisy(shape):
+    return np.random.randn(*shape)
+
+
+def seeded(shape, seed=0):
+    return np.random.default_rng(seed).standard_normal(shape)

@@ -1,0 +1,10 @@
+"""Fixture: exactly one RP006 violation (literal chunk default bypassing
+the tuning tables); the None-defaulted twin is the allowed idiom."""
+
+
+def bad_kernel(x, *, chunk=64):
+    return x, chunk
+
+
+def good_kernel(x, *, chunk=None):
+    return x, chunk

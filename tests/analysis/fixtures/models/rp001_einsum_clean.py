@@ -1,0 +1,8 @@
+"""Fixture: activation-activation einsums must NOT trip RP001 (no
+subscripted parameter operand), while a param-leaf einsum does elsewhere."""
+
+import jax.numpy as jnp
+
+
+def attention_scores(q, k):
+    return jnp.einsum("bqhd,bkhd->bhqk", q, k)

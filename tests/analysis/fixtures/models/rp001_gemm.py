@@ -1,0 +1,7 @@
+"""Fixture: exactly one RP001 violation (direct jnp.dot in models/)."""
+
+import jax.numpy as jnp
+
+
+def project(x, p):
+    return jnp.dot(x, p)

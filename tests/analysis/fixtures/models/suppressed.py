@@ -1,0 +1,7 @@
+"""Fixture: a real violation silenced by the inline allow marker."""
+
+import jax.numpy as jnp
+
+
+def ideal_only(x, p):
+    return jnp.dot(x, p)  # lint: allow=RP001 fixture exemption

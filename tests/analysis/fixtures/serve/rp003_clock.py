@@ -1,0 +1,8 @@
+"""Fixture: exactly one RP003 violation (direct monotonic read); the
+default-argument *reference* below is the allowed idiom and must not trip."""
+
+import time
+
+
+def stamp(clock=time.monotonic):
+    return time.monotonic()

@@ -1,0 +1,7 @@
+"""Fixture: exactly one RP002 violation (jnp call inside an async handler)."""
+
+import jax.numpy as jnp
+
+
+async def handle(payload):
+    return jnp.asarray(payload)

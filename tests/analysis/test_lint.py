@@ -1,0 +1,104 @@
+"""Invariant linter: per-rule fixtures (each trips its rule exactly once),
+suppression syntax, baseline round-trip, and the repo-wide dogfood gate."""
+
+from collections import Counter
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (RULES, Finding, lint_file, lint_paths,
+                            load_baseline, rule_codes, write_baseline)
+from repro.analysis.checker import lint_source
+
+FIXTURES = Path(__file__).parent / "fixtures"
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+CASES = [
+    ("models/rp001_gemm.py", "RP001"),
+    ("server/rp002_async.py", "RP002"),
+    ("serve/rp003_clock.py", "RP003"),
+    ("hwloop/rp004_random.py", "RP004"),
+    ("common/rp005_mutable.py", "RP005"),
+    ("kernels/rp006_blocks.py", "RP006"),
+]
+
+
+@pytest.mark.parametrize("rel,code", CASES, ids=[c for _, c in CASES])
+def test_fixture_trips_rule_exactly_once(rel, code):
+    findings = lint_file(FIXTURES / rel, root=FIXTURES)
+    assert [f.code for f in findings] == [code], findings
+    f = findings[0]
+    assert f.path == rel
+    assert f.fix_hint                      # every rule ships a fix-hint
+    assert f.line_text                     # baseline key is the source text
+
+
+def test_clean_fixtures_stay_clean():
+    for rel in ("models/rp001_einsum_clean.py", "models/suppressed.py"):
+        assert lint_file(FIXTURES / rel, root=FIXTURES) == []
+
+
+def test_inline_suppression_marker_on_line_above():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(x, p):\n"
+        "    # lint: allow=RP001 reason lives here\n"
+        "    return jnp.dot(x, p)\n"
+    )
+    assert lint_source(src, "models/x.py") == []
+    # without the marker the same source trips
+    assert [f.code for f in
+            lint_source(src.replace("# lint: allow=RP001 reason lives here",
+                                    "pass"), "models/x.py")] == ["RP001"]
+
+
+def test_rule_scoping_by_path_segment():
+    src = "import jax.numpy as jnp\ndef f(x, p):\n    return jnp.dot(x, p)\n"
+    assert [f.code for f in lint_source(src, "models/a.py")] == ["RP001"]
+    assert lint_source(src, "serve/a.py") == []   # RP001 scoped to models/
+
+
+def test_baseline_roundtrip(tmp_path):
+    all_findings = []
+    for rel, _ in CASES:
+        all_findings += lint_file(FIXTURES / rel, root=FIXTURES)
+    baseline = tmp_path / "baseline.json"
+    write_baseline(all_findings, baseline)
+
+    loaded = load_baseline(baseline)
+    assert sum(loaded.values()) == len(all_findings)
+
+    fresh, absorbed = lint_paths(
+        [FIXTURES / rel for rel, _ in CASES], root=FIXTURES,
+        baseline_path=baseline)
+    assert fresh == [] and absorbed == len(all_findings)
+
+    # a brand-new violation is NOT absorbed
+    extra = lint_source(
+        "import jax.numpy as jnp\ndef g(a, b):\n    return jnp.matmul(a, b)\n",
+        "models/new.py")
+    assert [f.code for f in extra] == ["RP001"]
+    assert load_baseline(baseline)[extra[0].key()] == 0
+
+
+def test_baseline_counts_duplicates(tmp_path):
+    f = Finding("RP001", "models/x.py", 3, 0, "m", "h", "y = jnp.dot(a, b)")
+    twin = Finding("RP001", "models/x.py", 9, 0, "m", "h", "y = jnp.dot(a, b)")
+    baseline = tmp_path / "b.json"
+    write_baseline([f], baseline)
+    from repro.analysis.findings import apply_baseline
+    # same source text twice, only one budgeted -> second stays fresh
+    assert apply_baseline([f, twin], load_baseline(baseline)) == [twin]
+
+
+def test_rule_registry_complete():
+    assert rule_codes() == [f"RP00{i}" for i in range(1, 7)]
+    assert all(r.fix_hint and r.description for r in RULES)
+
+
+def test_repo_src_is_clean_under_checked_in_baseline():
+    """The dogfood gate: src/repro must lint clean with the repo baseline
+    (intentional exemptions are inline-suppressed, not baselined)."""
+    fresh, _ = lint_paths([REPO_ROOT / "src"], root=REPO_ROOT,
+                          baseline_path=REPO_ROOT / "lint_baseline.json")
+    assert fresh == [], "\n".join(f.format() for f in fresh)
