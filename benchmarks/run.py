@@ -7,11 +7,14 @@ cluster count, rel-error, ...).
         [--out-dir DIR] [--json-out PATH] [--min-flow-speedup X]
 
 JSON artifacts (``BENCH_serve.json``, ``BENCH_flow.json``,
-``BENCH_hwloop.json``, ``BENCH_traffic.json``) land in
-``--out-dir`` (default: CWD); ``--json-out`` overrides the exact path when a
-single ``--only`` scenario is run.  ``--min-flow-speedup`` turns the ``flow``
-scenario into a CI gate: exit non-zero unless the vectorized sweep beats the
-loop-reference sweep by at least that factor.
+``BENCH_hwloop.json``, ``BENCH_traffic.json``, ``BENCH_resilience.json``)
+land in ``--out-dir`` (default: CWD); ``--json-out`` overrides the exact path
+when a single ``--only`` scenario is run.  ``--min-flow-speedup`` turns the
+``flow`` scenario into a CI gate: exit non-zero unless the vectorized sweep
+beats the loop-reference sweep by at least that factor.
+``--resilience-gate`` does the same for the ``resilience`` scenario: exit
+non-zero unless abft-guarded GEMMs show zero silent escapes and the chaos
+campaign is all-green.
 """
 
 from __future__ import annotations
@@ -651,6 +654,103 @@ def bench_analysis(fast: bool) -> List[Tuple[str, float, str]]:
     return out
 
 
+def bench_resilience(fast: bool) -> List[Tuple[str, float, str]]:
+    """ABFT guard economics + end-to-end chaos campaign
+    (repro.resilience): (a) guard overhead per mode at nominal rails,
+    (b) detection coverage / corrected rate / silent escapes per corruption
+    model at crash-region rails with the escalation ladder disabled (pure
+    verification), (c) the reduced-scale fault campaign over the full
+    serving stack.  Writes BENCH_resilience.json; the CI resilience gate
+    (``--resilience-gate``) pins abft silent escapes to zero and the
+    campaign to all-green."""
+    from repro.backend import EmulatedBackend
+    from repro.resilience import GuardedBackend
+    from repro.resilience.chaos import V_CRASH, run_campaign
+
+    rng = np.random.default_rng(0)
+    shapes = [(8, 8, 8), (16, 24, 8), (12, 40, 20)]
+    # integer-valued operands: checksums are exact in f64, so clean GEMMs
+    # match the ideal product bit for bit and every mismatch is injected
+    ops = [(rng.integers(-4, 5, size=(m, k)).astype(np.float64),
+            rng.integers(-4, 5, size=(k, n)).astype(np.float64))
+           for m, k, n in shapes]
+    rows: List[Tuple[str, float, str]] = []
+    t_all = time.perf_counter()
+
+    # (a) verification overhead at nominal (fault-free) rails
+    overhead: Dict[str, Dict] = {}
+    for mode in ("unguarded", "freivalds", "abft"):
+        be = EmulatedBackend.nominal() if mode == "unguarded" else \
+            GuardedBackend(EmulatedBackend.nominal(), mode=mode)
+
+        def run(be=be):
+            for a, b in ops:
+                be.matmul(a, b)
+
+        us, _ = _time_us(run, repeats=3 if fast else 10)
+        overhead[mode] = {"us_per_3gemms": us}
+        rows.append((f"resilience/nominal_{mode}", us, "faults=none"))
+    for mode in ("freivalds", "abft"):
+        pct = 100.0 * (overhead[mode]["us_per_3gemms"]
+                       / max(overhead["unguarded"]["us_per_3gemms"], 1e-9)
+                       - 1.0)
+        overhead[mode]["overhead_pct"] = pct
+        rows.append((f"resilience/overhead_{mode}", 0.0,
+                     f"overhead={pct:.1f}%"))
+
+    # (b) detection coverage at crash-region rails, ladder disabled: no
+    # retries, no heal, fail_open — what the verifier alone sees
+    rounds = 5 if fast else 20
+    sweep: Dict[str, Dict] = {}
+    for mode in ("freivalds", "abft"):
+        sweep[mode] = {}
+        for corruption in ("bitflip", "stale", "tedrop"):
+            guard = GuardedBackend(
+                EmulatedBackend.nominal(corruption=corruption), mode=mode,
+                policy="fail_open", max_retries=0, heal=False)
+            accel = guard.accel
+            accel.set_rails(np.full(accel.n_partitions, V_CRASH))
+            srng = np.random.default_rng(7)
+            n = corrupted = detected = corrected = escapes = 0
+            for _ in range(rounds):
+                for m, k, nn in shapes:
+                    a = srng.integers(-4, 5, size=(m, k)).astype(np.float64)
+                    b = srng.integers(-4, 5, size=(k, nn)).astype(np.float64)
+                    out, tel = guard.matmul(a, b)
+                    bad = not np.array_equal(np.asarray(out), a @ b)
+                    n += 1
+                    corrupted += int(bad or tel.guard_detected > 0)
+                    detected += int(tel.guard_detected > 0)
+                    corrected += int(tel.guard_corrected > 0)
+                    escapes += int(bad and tel.guard_detected == 0)
+            cov = detected / max(corrupted, 1)
+            sweep[mode][corruption] = {
+                "gemms": n, "corrupted": corrupted, "detected": detected,
+                "corrected": corrected, "silent_escapes": escapes,
+                "detection_coverage": cov,
+                "corrupted_rate": corrupted / n,
+            }
+            rows.append((f"resilience/{mode}_{corruption}", 0.0,
+                         f"coverage={cov:.2f}_corrected={corrected}"
+                         f"_escapes={escapes}"))
+
+    # (c) the full-stack chaos campaign (engine + HTTP frontend + client)
+    report = run_campaign(fast=True)
+    rows.append(("resilience/campaign", report.elapsed_s * 1e6,
+                 f"ok={report.ok}_crashes={report.crashes}"
+                 f"_corrupted_streams={report.corrupted_streams}"))
+
+    payload = bench_payload(
+        "resilience", time.perf_counter() - t_all,
+        {"shapes": shapes, "rounds": rounds, "v_crash": V_CRASH, "seed": 0,
+         "tech": "vtr-22nm", "array_n": 8},
+        overhead=overhead, corruption_sweep=sweep,
+        campaign=report.to_dict())
+    with open(_json_path("BENCH_resilience.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+    return rows
+
+
 BENCHES: Dict[str, Callable] = {
     "analysis": bench_analysis,
     "tableII": bench_tableII,
@@ -666,6 +766,7 @@ BENCHES: Dict[str, Callable] = {
     "hwloop": bench_hwloop,
     "traffic": bench_traffic,
     "accuracy_voltage": bench_accuracy_voltage,
+    "resilience": bench_resilience,
 }
 
 
@@ -681,6 +782,10 @@ def main() -> None:
     ap.add_argument("--min-flow-speedup", type=float, default=None,
                     help="fail (exit 1) unless the flow scenario's vectorized "
                          "sweep beats the reference by at least this factor")
+    ap.add_argument("--resilience-gate", action="store_true",
+                    help="fail (exit 1) unless the resilience scenario shows "
+                         "zero abft silent escapes and an all-green chaos "
+                         "campaign")
     args = ap.parse_args()
     if args.json_out and not args.only:
         ap.error("--json-out requires --only (it names a single artifact)")
@@ -690,6 +795,8 @@ def main() -> None:
     names = [args.only] if args.only else list(BENCHES)
     if args.min_flow_speedup is not None and "flow" not in names:
         ap.error("--min-flow-speedup requires the flow scenario to run")
+    if args.resilience_gate and "resilience" not in names:
+        ap.error("--resilience-gate requires the resilience scenario to run")
     print("name,us_per_call,derived")
     for name in names:
         for row_name, us, derived in BENCHES[name](args.fast):
@@ -706,6 +813,24 @@ def main() -> None:
               f"(need >= {args.min_flow_speedup}), "
               f"bit_identical={payload['bit_identical_reports']} -> "
               f"{'PASS' if ok else 'FAIL'}", flush=True)
+        if not ok:
+            sys.exit(1)
+
+    if args.resilience_gate:
+        path = args.json_out if (args.json_out
+                                 and args.only == "resilience") \
+            else os.path.join(args.out_dir, "BENCH_resilience.json")
+        with open(path) as f:
+            payload = json.load(f)
+        escapes = sum(c["silent_escapes"]
+                      for c in payload["corruption_sweep"]["abft"].values())
+        campaign_ok = payload["campaign"]["ok"] \
+            and payload["campaign"]["crashes"] == 0 \
+            and payload["campaign"]["corrupted_streams"] == 0
+        ok = escapes == 0 and campaign_ok
+        print(f"resilience gate: abft_silent_escapes={escapes} (need 0), "
+              f"campaign_ok={campaign_ok} -> {'PASS' if ok else 'FAIL'}",
+              flush=True)
         if not ok:
             sys.exit(1)
 

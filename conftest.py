@@ -1,13 +1,30 @@
 """Repo-wide pytest config.
 
-The container does not ship ``hypothesis``; four test modules use it for
-property tests.  Rather than losing those modules' example-based tests to a
-collection error, install a minimal shim that skips ``@given`` tests when the
-real library is unavailable.
+Two pieces:
+
+* Single-core CI hosts deadlock the ``pure_callback`` serving path (XLA's
+  CPU client gets a one-thread pool there, and a host callback waiting on a
+  jax array starves the enclosing jit'd step).
+  ``ensure_host_callback_capacity`` injects
+  ``--xla_force_host_platform_device_count=2`` into ``XLA_FLAGS`` before any
+  test creates the CPU client, which gives the pool a second thread and
+  makes the emulated/guarded serving tests runnable everywhere.
+
+* The container does not ship ``hypothesis``; four test modules use it for
+  property tests.  Rather than losing those modules' example-based tests to
+  a collection error, install a minimal shim that skips ``@given`` tests
+  when the real library is unavailable.
 """
 
+import os
 import sys
 import types
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
+
+from repro.backend.base import ensure_host_callback_capacity  # noqa: E402
+
+ensure_host_callback_capacity()
 
 try:  # pragma: no cover - exercised only where hypothesis exists
     import hypothesis  # noqa: F401

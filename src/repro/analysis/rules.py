@@ -1,4 +1,4 @@
-"""Repo-specific invariant rules (RP001..RP006).
+"""Repo-specific invariant rules (RP001..RP007).
 
 Each rule pins a convention an earlier PR made load-bearing:
 
@@ -18,6 +18,10 @@ RP005     No mutable default arguments.
 RP006     Pallas block/chunk shapes in ``kernels/`` come from
           ``tuning.BLOCK_TABLE``/``CHUNK_TABLE`` (literal defaults bypass
           the tables and break divisibility on off-table shapes).
+RP007     No swallowed exceptions in ``serve/``/``server/``/``hwloop/``
+          (PR 8) — a bare ``except:`` or a pass-only ``except Exception:``
+          hides pump deaths and silent-corruption escalation; the
+          resilience contract requires faults to surface or be handled.
 ========  ====================================================================
 
 Rules are conservative by design: the RP001 einsum check only fires when an
@@ -370,7 +374,61 @@ RP006 = Rule(
 )
 
 
-RULES: Tuple[Rule, ...] = (RP001, RP002, RP003, RP004, RP005, RP006)
+# ---- RP007: swallowed exceptions in the serving/hardware path ---------------
+
+_BROAD_EXC = {"Exception", "BaseException"}
+
+
+def _swallows(body: Sequence[ast.stmt]) -> bool:
+    """A handler body that only `pass`es (or `...`s) discards the fault."""
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if isinstance(stmt, ast.Expr) and \
+                isinstance(stmt.value, ast.Constant) and \
+                stmt.value.value is Ellipsis:
+            continue
+        return False
+    return True
+
+
+def _check_rp007(ctx: RuleContext) -> List[Finding]:
+    rule = RP007
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            out.append(_finding(
+                rule, ctx, node,
+                "bare `except:` catches everything (KeyboardInterrupt, "
+                "SystemExit, pump shutdown) — faults vanish silently"))
+            continue
+        types = node.type.elts if isinstance(node.type, ast.Tuple) \
+            else [node.type]
+        broad = [canonical(t, ctx.imports) for t in types
+                 if canonical(t, ctx.imports) in _BROAD_EXC]
+        if broad and _swallows(node.body):
+            out.append(_finding(
+                rule, ctx, node,
+                f"`except {', '.join(broad)}` with a pass-only body "
+                f"swallows the fault instead of surfacing or handling it"))
+    return out
+
+
+RP007 = Rule(
+    code="RP007", name="swallowed-exception",
+    scopes=("serve", "server", "hwloop"),
+    fix_hint="catch the narrowest exception type the contract allows "
+             "(narrow-typed `except ...: pass` is fine), or handle the "
+             "fault and surface it through telemetry/re-raise; intentional "
+             "broad catches need `# lint: allow=RP007 <reason>`",
+    description="bare or pass-only broad except in serve/server/hwloop",
+    check=_check_rp007,
+)
+
+
+RULES: Tuple[Rule, ...] = (RP001, RP002, RP003, RP004, RP005, RP006, RP007)
 
 
 def rule_codes() -> List[str]:

@@ -19,7 +19,8 @@ per-step flag/replay/energy telemetry in ``EngineStats``.
 """
 
 from .base import (PRECISIONS, BackendTelemetry, MatmulBackend,
-                   available_backends, current_backend, get_backend, matmul,
+                   available_backends, current_backend,
+                   ensure_host_callback_capacity, get_backend, matmul,
                    quantize_sym_i8, register_backend, set_default,
                    use_backend)
 from .impls import (EmulatedBackend, IdealBackend, ReferenceBackend,
@@ -27,7 +28,8 @@ from .impls import (EmulatedBackend, IdealBackend, ReferenceBackend,
 
 __all__ = [
     "PRECISIONS", "BackendTelemetry", "MatmulBackend", "available_backends",
-    "current_backend", "get_backend", "matmul", "quantize_sym_i8",
+    "current_backend", "ensure_host_callback_capacity", "get_backend",
+    "matmul", "quantize_sym_i8",
     "register_backend", "set_default", "use_backend",
     "IdealBackend", "ReferenceBackend", "SimulatedBackend", "EmulatedBackend",
 ]

@@ -38,11 +38,37 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import math
+import os
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def ensure_host_callback_capacity() -> bool:
+    """Single-core deadlock guard for the ``pure_callback`` serving path.
+
+    On hosts where ``os.cpu_count() == 1`` XLA's CPU client gets a
+    one-thread execution pool; a host callback then runs ON that thread, and
+    any wait it performs on a jax array (``pure_callback_impl`` re-wraps the
+    operands with ``device_put``, so even ``np.asarray`` on an argument
+    waits) can starve against the enclosing computation — the jit'd decode
+    step and the backend callback deadlock each other.  Forcing two virtual
+    host devices gives the client a second thread and removes the race.
+
+    Must run before jax creates its CPU client (importing jax is fine).
+    Returns True when the flag was injected.  No-op on multi-core hosts or
+    when the flag is already present.
+    """
+    if (os.cpu_count() or 1) != 1:
+        return False
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" in flags:
+        return False
+    os.environ["XLA_FLAGS"] = \
+        (flags + " --xla_force_host_platform_device_count=2").strip()
+    return True
 
 #: Precision tiers of the protocol.  ``None`` means "native" (keep the
 #: inputs' promoted dtype).
@@ -72,6 +98,13 @@ class BackendTelemetry:
     energy_j: float = 0.0
     rel_error: float = 0.0          # max over the accumulated calls
     partition_flags: Optional[List[bool]] = None
+    # ABFT guard counters (repro.resilience.GuardedBackend; zero elsewhere)
+    guard_checks: int = 0           # verifications run
+    guard_detected: int = 0         # calls whose first verification failed
+    guard_corrected: int = 0        # single-element locate-and-correct wins
+    guard_retries: int = 0          # bounded re-executions
+    guard_heals: int = 0            # rail heals (watchdog / nominal fallback)
+    guard_uncorrected: int = 0      # mismatches surviving the ladder (fail_open)
 
     def merge(self, other: "BackendTelemetry") -> None:
         self.calls += other.calls
@@ -80,6 +113,12 @@ class BackendTelemetry:
         self.replays += other.replays
         self.silent += other.silent
         self.energy_j += other.energy_j
+        self.guard_checks += other.guard_checks
+        self.guard_detected += other.guard_detected
+        self.guard_corrected += other.guard_corrected
+        self.guard_retries += other.guard_retries
+        self.guard_heals += other.guard_heals
+        self.guard_uncorrected += other.guard_uncorrected
         self.rel_error = max(self.rel_error, other.rel_error)
         if other.partition_flags is not None:
             if self.partition_flags is None:
@@ -98,6 +137,12 @@ class BackendTelemetry:
             "rel_error": float(self.rel_error),
             "partition_flags": (None if self.partition_flags is None
                                 else [bool(f) for f in self.partition_flags]),
+            "guard_checks": int(self.guard_checks),
+            "guard_detected": int(self.guard_detected),
+            "guard_corrected": int(self.guard_corrected),
+            "guard_retries": int(self.guard_retries),
+            "guard_heals": int(self.guard_heals),
+            "guard_uncorrected": int(self.guard_uncorrected),
         }
 
 
@@ -147,6 +192,10 @@ class MatmulBackend:
     #: The ideal backend routes as a native XLA dot (zero overhead); every
     #: other backend crosses to the host per GEMM.
     is_ideal: bool = False
+    #: True only for repro.resilience.GuardedBackend — the serve engine uses
+    #: it to surface per-step ABFT guard telemetry without importing the
+    #: resilience package.
+    is_guarded: bool = False
 
     def __init__(self) -> None:
         self.total = BackendTelemetry()

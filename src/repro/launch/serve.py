@@ -30,6 +30,14 @@ Flags:
     --hwloop-tech / --hwloop-array-n
                                  operating point of the emulated array /
                                  hwloop session
+    --guard {off,freivalds,abft} wrap the execution backend in the ABFT
+                                 GuardedBackend (repro.resilience): checksum
+                                 verification, locate-and-correct, and the
+                                 retry -> rail-heal -> policy escalation
+                                 ladder on silent corruption
+    --guard-policy {fail_open,fail_closed}
+                                 what an unverifiable product does: return
+                                 with telemetry (open) or raise (closed)
     --policy {fifo,priority}     scheduler admission policy; priority enables
                                  tiers + TTFT-deadline shedding
     --max-pending N              bounded admission queue (backpressure: a
@@ -49,6 +57,10 @@ from __future__ import annotations
 import argparse
 import json
 import time
+
+from ..backend import ensure_host_callback_capacity
+
+ensure_host_callback_capacity()     # before jax builds its CPU client
 
 import jax
 import numpy as np
@@ -137,6 +149,10 @@ def main() -> None:
     ap.add_argument("--json-out", type=str, default=None)
     ap.add_argument("--backend", default="ideal",
                     choices=("ideal", "reference", "simulated", "emulated"))
+    ap.add_argument("--guard", default="off",
+                    choices=("off", "freivalds", "abft"))
+    ap.add_argument("--guard-policy", default="fail_open",
+                    choices=("fail_open", "fail_closed"))
     ap.add_argument("--hwloop", action="store_true")
     ap.add_argument("--hwloop-tech", default="vtr-22nm")
     ap.add_argument("--hwloop-array-n", type=int, default=8)
@@ -183,6 +199,13 @@ def main() -> None:
     elif args.backend != "ideal":
         from ..backend import get_backend
         engine_kw["backend"] = get_backend(args.backend)
+    if args.guard != "off":
+        if args.backend == "ideal":
+            ap.error("--guard needs a non-ideal --backend to protect "
+                     "(the ideal path never corrupts)")
+        from ..resilience import GuardedBackend
+        engine_kw["backend"] = GuardedBackend(
+            engine_kw["backend"], mode=args.guard, policy=args.guard_policy)
     if args.hwloop:
         from ..hwloop import HwLoopSession
         engine_kw["hwloop"] = HwLoopSession(fcfg, probe_rows=8,

@@ -1,0 +1,23 @@
+"""`repro.resilience`: surviving silent errors on the undervolted array.
+
+Two pieces (PR 8):
+
+* :mod:`repro.resilience.guard` — :class:`GuardedBackend`, an ABFT wrapper
+  over any :class:`~repro.backend.base.MatmulBackend` (row/column checksums
+  or a Freivalds probe, locate-and-correct, and a retry → rail-heal →
+  policy escalation ladder).  Importing this package registers it as the
+  ``"guarded"`` backend.
+* :mod:`repro.resilience.chaos` — the seeded fault-scenario campaign that
+  drives the guarded stack end-to-end through :class:`ServeEngine` and the
+  HTTP frontend and asserts graceful degradation.
+"""
+
+from .chaos import (ChaosReport, ScenarioResult, SCENARIOS, run_campaign,
+                    run_scenario)
+from .guard import GuardedBackend, GuardError
+
+__all__ = [
+    "GuardedBackend", "GuardError",
+    "ChaosReport", "ScenarioResult", "SCENARIOS",
+    "run_campaign", "run_scenario",
+]

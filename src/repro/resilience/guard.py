@@ -1,0 +1,277 @@
+"""ABFT-guarded GEMM execution: :class:`GuardedBackend`.
+
+The emulated accelerator's SILENT corruption modes (stale / TE-Drop /
+bitflip, :mod:`repro.hwloop.inject`) are by definition invisible to the
+Razor replay path — at near-threshold rails a corrupted product flows
+straight into model outputs with no flag.  ``GuardedBackend`` wraps ANY
+:class:`~repro.backend.base.MatmulBackend` and closes that hole with
+algorithm-based fault tolerance (Huang & Abraham, 1984; the standard ABFT
+treatment for GEMM on unreliable hardware — Salami et al.'s undervolted
+FPGAs motivate exactly this guard):
+
+* ``mode="abft"``     — row/column checksum verification: the product's row
+  and column sums are checked against two cheap GEMVs computed on the
+  (trusted) host in float64.  O(MK + KN + MN) extra work for an O(MNK)
+  product.  A single corrupted element shows up as exactly one bad row i
+  and one bad column j with matching residuals — it is located and
+  corrected in place without re-execution.
+* ``mode="freivalds"``— Freivalds' probabilistic probe: one seeded ±1
+  vector, ``C @ x`` vs ``A @ (B @ x)``.  Detection only (no localization),
+  about a third of the ABFT cost; a corruption escapes one probe with
+  probability <= 1/2, so ``probes=k`` drives the miss rate to 2^-k.
+* ``mode="off"``      — transparent pass-through (measurement baseline).
+
+On an uncorrectable mismatch the guard walks an escalation ladder:
+
+1. bounded re-execution (``max_retries``) — clears transient faults;
+2. rail heal — the detected corruption is fed to the attached
+   :class:`~repro.hwloop.session.HwLoopSession` watchdog as all-partitions
+   flags until its patience recalibrates the rails (the PR-4 heal path), or
+   straight to the device's nominal rails when no session is attached.
+   Deterministic undervolt faults survive retries; healing removes their
+   cause, and the re-executed product at healthy rails is bit-identical to
+   the ideal backend (the emulator's clean-tile parity property);
+3. policy — ``fail_open`` returns the best product seen with
+   ``guard_uncorrected`` telemetry; ``fail_closed`` raises
+   :class:`GuardError`.
+
+All guard activity lands in the ``guard_*`` counters of
+:class:`~repro.backend.base.BackendTelemetry`, so the serve engine's
+per-step pops surface detection/correction/heal rates per decode step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from ..backend.base import (BackendTelemetry, MatmulBackend, get_backend,
+                            register_backend)
+
+MODES = ("off", "freivalds", "abft")
+POLICIES = ("fail_open", "fail_closed")
+
+
+class GuardError(RuntimeError):
+    """Raised under ``policy="fail_closed"`` when the escalation ladder
+    cannot produce a verified product."""
+
+
+@dataclasses.dataclass
+class _Verdict:
+    """One verification pass over a candidate product."""
+
+    ok: bool
+    bad_rows: np.ndarray            # indices of rows failing the checksum
+    bad_cols: np.ndarray            # indices of cols failing the checksum
+    row_err: np.ndarray             # (M,) row-sum residuals
+    col_err: np.ndarray             # (N,) col-sum residuals
+
+
+class GuardedBackend(MatmulBackend):
+    """ABFT wrapper conforming to the ``MatmulBackend`` protocol.
+
+    ``inner`` is any backend name or instance; the guard composes at the
+    ``_execute`` level, so the shared precision pipeline (including the
+    int8 quantize/dequant path) runs ONCE at the guard and the inner
+    backend sees the same integer-valued operands it would unguarded —
+    checksums over integer-valued float data are exact, which is what makes
+    the bit-identical restoration guarantee testable.
+    """
+
+    is_guarded = True
+
+    def __init__(self, inner: Any = "emulated", *, mode: str = "abft",
+                 policy: str = "fail_closed", max_retries: int = 2,
+                 probes: int = 2, tol: float = 1e-6, seed: int = 0,
+                 heal: bool = True, session=None):
+        super().__init__()
+        if mode not in MODES:
+            raise ValueError(f"unknown guard mode {mode!r}; known: {MODES}")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown guard policy {policy!r}; "
+                             f"known: {POLICIES}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if probes < 1:
+            raise ValueError(f"probes must be >= 1, got {probes}")
+        self.inner = get_backend(inner)
+        self.mode = mode
+        self.policy = policy
+        self.max_retries = int(max_retries)
+        self.probes = int(probes)
+        self.tol = float(tol)
+        self.heal = bool(heal)
+        self.session = session
+        self.name = f"guarded[{self.inner.name}]"
+        self._rng = np.random.default_rng(seed)
+
+    # -- wiring ---------------------------------------------------------------
+
+    @property
+    def accel(self):
+        """Delegate to the inner backend's live device (when it has one), so
+        the serve engine's hwloop adapter sees through the guard."""
+        return self.inner.accel
+
+    def attach_session(self, session) -> None:
+        """Bind the hwloop session whose watchdog the heal path drives (the
+        serve engine calls this when both guard and session are present)."""
+        self.session = session
+
+    def add_tokens(self, n: int) -> None:
+        self.inner.add_tokens(n)
+
+    # -- verification ---------------------------------------------------------
+
+    def _abft_verify(self, a64: np.ndarray, b64: np.ndarray,
+                     out64: np.ndarray) -> _Verdict:
+        row_ref = a64 @ b64.sum(axis=1)              # (M,) trusted GEMV
+        col_ref = a64.sum(axis=0) @ b64              # (N,) trusted GEMV
+        row_err = out64.sum(axis=1) - row_ref
+        col_err = out64.sum(axis=0) - col_ref
+        # scale-aware tolerance: exact-zero for integer-valued operands is
+        # never reached by float inputs, so bound by the checksum's own
+        # magnitude envelope
+        row_tol = self.tol * (np.abs(a64) @ np.abs(b64).sum(axis=1) + 1.0)
+        col_tol = self.tol * (np.abs(a64).sum(axis=0) @ np.abs(b64) + 1.0)
+        bad_rows = np.flatnonzero(np.abs(row_err) > row_tol)
+        bad_cols = np.flatnonzero(np.abs(col_err) > col_tol)
+        return _Verdict(ok=(bad_rows.size == 0 and bad_cols.size == 0),
+                        bad_rows=bad_rows, bad_cols=bad_cols,
+                        row_err=row_err, col_err=col_err)
+
+    def _freivalds_verify(self, a64: np.ndarray, b64: np.ndarray,
+                          out64: np.ndarray) -> bool:
+        n = b64.shape[1]
+        scale = self.tol * (np.abs(a64) @ np.abs(b64).sum(axis=1) + 1.0)
+        for _ in range(self.probes):
+            x = self._rng.integers(0, 2, size=n).astype(np.float64) * 2 - 1
+            if np.any(np.abs(out64 @ x - a64 @ (b64 @ x)) > scale):
+                return False
+        return True
+
+    def _verify(self, a64, b64, out64) -> _Verdict:
+        if self.mode == "freivalds":
+            ok = self._freivalds_verify(a64, b64, out64)
+            empty = np.empty(0, np.int64)
+            return _Verdict(ok=ok, bad_rows=empty, bad_cols=empty,
+                            row_err=np.zeros(out64.shape[0]),
+                            col_err=np.zeros(out64.shape[1]))
+        return self._abft_verify(a64, b64, out64)
+
+    # -- escalation ladder ----------------------------------------------------
+
+    def _try_correct(self, out64: np.ndarray, v: _Verdict) -> bool:
+        """Single-element locate-and-correct: one bad row x one bad column
+        with matching residuals pins the corruption to C[i, j]."""
+        if self.mode != "abft" or v.bad_rows.size != 1 or v.bad_cols.size != 1:
+            return False
+        i, j = int(v.bad_rows[0]), int(v.bad_cols[0])
+        delta_r, delta_c = v.row_err[i], v.col_err[j]
+        scale = max(abs(delta_r), abs(delta_c), 1.0)
+        if abs(delta_r - delta_c) > self.tol * scale:
+            return False                  # residuals disagree: >1 element hit
+        out64[i, j] -= delta_r
+        return True
+
+    def _heal_rails(self) -> bool:
+        """Re-rail the inner device: watchdog recalibration when a session is
+        attached (detected corruption counts as an all-partitions event),
+        else straight to the tech node's nominal voltage."""
+        accel = getattr(self.inner, "accel", None)
+        if self.session is not None:
+            flags = np.ones(self.session.n_partitions, dtype=bool)
+            for _ in range(int(self.session.watchdog.patience) + 1):
+                if self.session.observe_flags(flags):
+                    return True
+            return False
+        if accel is None:
+            return False
+        accel.set_rails(np.full(accel.n_partitions,
+                                float(accel.timing.tech.v_nom)))
+        return True
+
+    # -- execution ------------------------------------------------------------
+
+    def _execute(self, a: np.ndarray, b: np.ndarray
+                 ) -> Tuple[np.ndarray, BackendTelemetry]:
+        out, tel = self.inner._execute(a, b)
+        if self.mode == "off":
+            return out, tel
+        a64 = np.asarray(a, dtype=np.float64)
+        b64 = np.asarray(b, dtype=np.float64)
+        out64 = np.asarray(out, dtype=np.float64).copy()
+        tel.guard_checks += 1
+        v = self._verify(a64, b64, out64)
+        if v.ok:
+            return out64, tel
+        tel.guard_detected += 1
+
+        if self._try_correct(out64, v):
+            tel.guard_checks += 1
+            if self._verify(a64, b64, out64).ok:
+                tel.guard_corrected += 1
+                return out64, tel
+
+        # rung 1: bounded re-execution (clears transient faults; a
+        # deterministic undervolt fault reproduces and falls through)
+        for _ in range(self.max_retries):
+            out_r, tel_r = self.inner._execute(a, b)
+            tel.merge(tel_r)
+            tel.calls -= 1              # one protocol call, several executions
+            tel.guard_retries += 1
+            out64 = np.asarray(out_r, dtype=np.float64).copy()
+            tel.guard_checks += 1
+            v = self._verify(a64, b64, out64)
+            if v.ok:
+                return out64, tel
+            if self._try_correct(out64, v):
+                tel.guard_checks += 1
+                if self._verify(a64, b64, out64).ok:
+                    tel.guard_corrected += 1
+                    return out64, tel
+
+        # rung 2: heal the rails, then one more execution at health
+        if self.heal and self._heal_rails():
+            tel.guard_heals += 1
+            out_r, tel_r = self.inner._execute(a, b)
+            tel.merge(tel_r)
+            tel.calls -= 1
+            out64 = np.asarray(out_r, dtype=np.float64).copy()
+            tel.guard_checks += 1
+            if self._verify(a64, b64, out64).ok:
+                return out64, tel
+
+        # rung 3: policy
+        tel.guard_uncorrected += 1
+        if self.policy == "fail_closed":
+            raise GuardError(
+                f"unverified product after {self.max_retries} retries "
+                f"(mode={self.mode}, heal={self.heal}, "
+                f"inner={self.inner.name})")
+        return out64, tel
+
+    # -- telemetry ------------------------------------------------------------
+
+    def summary(self) -> Dict[str, Any]:
+        out = super().summary()
+        out["mode"] = self.mode
+        out["policy"] = self.policy
+        inner = self.inner.summary()
+        out["inner"] = inner
+        # surface the inner energy accounting at the top level so guarded
+        # serving keeps the J/token telemetry consumers expect
+        for key in ("energy_per_token_j", "tokens"):
+            if key in inner:
+                out[key] = inner[key]
+        return out
+
+
+def _make_guarded(inner: Any = "emulated", **kw: Any) -> GuardedBackend:
+    return GuardedBackend(inner, **kw)
+
+
+register_backend("guarded", _make_guarded)

@@ -72,6 +72,7 @@ class EngineStats:
     truncated: int = 0               # cut short by budget or max_len
     unserved: int = 0                # still queued at run_until_drained return
     shed: int = 0                    # dropped by admission (queue/deadline)
+    cancelled: int = 0               # abandoned by the caller (disconnect)
     tokens_generated: int = 0
     slot_busy_steps: List[int] = dataclasses.field(default_factory=list)
     ttft_s: List[float] = dataclasses.field(default_factory=list)
@@ -90,6 +91,11 @@ class EngineStats:
     backend_step_flags: List[List[bool]] = dataclasses.field(
         default_factory=list)
     backend_telemetry: Optional[Dict[str, Any]] = None
+    # ABFT guard events (GuardedBackend only): one entry per decode step on
+    # which the guard did anything — {"step": decode step index, plus the
+    # non-zero guard_* counters of that step's GEMMs}
+    guard_step_events: List[Dict[str, int]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def model_steps(self) -> int:
@@ -142,6 +148,10 @@ class ServeEngine:
                                 and hasattr(backend, "accel"))
         if self._hwloop_adapter:
             self.hwloop.attach_accelerator(backend.accel)
+            if backend.is_guarded:
+                # the guard's escalation ladder heals rails THROUGH the
+                # watchdog rather than jumping straight to nominal
+                backend.attach_session(hwloop)
         self.scheduler = SlotScheduler(slots, policy=policy,
                                        max_pending=max_pending, clock=clock)
         self.stats = EngineStats(
@@ -219,10 +229,35 @@ class ServeEngine:
             req.on_token(req, tok)
 
     def _finished(self, req: Request) -> None:
-        """Terminal-state bookkeeping shared by every finish site."""
+        """Terminal-state bookkeeping shared by every finish site.
+
+        ``fire_finish`` is idempotent, so a request that reaches several
+        terminal paths (e.g. cancelled by the client while the drain loop
+        truncates it) still delivers ``on_finish`` exactly once."""
         req.finish_t = self._clock()
-        if req.on_finish is not None:
-            req.on_finish(req)
+        req.fire_finish()
+
+    def _reap_cancelled(self) -> None:
+        """Release slots (and queue positions) of requests their caller
+        abandoned — client disconnect / request timeout.  A cancelled request
+        is terminal but neither completed nor truncated."""
+        for slot, req in list(self.scheduler.active.items()):
+            if req.cancelled and not req.done:
+                req.done = True
+                self.stats.cancelled += 1
+                self.scheduler.evict(slot)
+                self._cur[slot] = BOS
+                self._finished(req)
+        if any(r.cancelled for r in self.scheduler.pending):
+            keep: List[Request] = []
+            for req in self.scheduler.pending:
+                if req.cancelled and not req.done:
+                    req.done = True
+                    self.stats.cancelled += 1
+                    self._finished(req)
+                else:
+                    keep.append(req)
+            self.scheduler.pending = collections.deque(keep)
 
     def _maybe_finish(self, slot: int, req: Request) -> None:
         # generating n tokens writes n-1 of them into the cache (positions
@@ -282,8 +317,10 @@ class ServeEngine:
         """One engine iteration: admit into free slots, then one batched
         decode step.  Idle slots are fed BOS and skipped in argmax/token
         bookkeeping.  Returns model calls used."""
+        self._reap_cancelled()
         used = self._admit(budget)
         self.stats.shed = self.scheduler.n_shed
+        self._reap_cancelled()
         if not self.scheduler.active or used >= budget:
             return used
         if self._track_backend:
@@ -308,6 +345,14 @@ class ServeEngine:
             step_flags = [bool(f) for f in (tel.partition_flags or [])]
             self.stats.backend_step_flags.append(step_flags)
             self.backend.add_tokens(len(step_tokens))
+            if self.backend.is_guarded:
+                ev = {k: int(getattr(tel, k)) for k in (
+                    "guard_detected", "guard_corrected", "guard_retries",
+                    "guard_heals", "guard_uncorrected")
+                    if getattr(tel, k)}
+                if ev:
+                    self.stats.guard_step_events.append(
+                        {"step": self.stats.decode_steps - 1, **ev})
         if self.hwloop is not None and step_tokens:
             if self._hwloop_adapter:
                 # thin adapter: real GEMM flags -> watchdog -> rail heal
@@ -421,6 +466,7 @@ class WaveServeEngine:
                         r.done = True
                         r.finish_t = self._clock()
                         self.stats.completed += 1
+                        r.fire_finish()
             if all(r.done for r in wave):
                 break
             logits, state = self._step(self.params, state,
@@ -440,4 +486,5 @@ class WaveServeEngine:
                 r.done = r.truncated = True
                 r.finish_t = self._clock()
                 self.stats.truncated += 1
+                r.fire_finish()
         return steps

@@ -55,6 +55,8 @@ class Request:
     deadline_s: Optional[float] = None   # TTFT SLO, seconds from submission
     shed: bool = False               # dropped by the scheduler, never decoded
     shed_reason: Optional[str] = None    # "queue_full" | "deadline"
+    cancelled: bool = False          # caller abandoned it (disconnect/timeout);
+    #                                  the engine reaps it at the next step
     # telemetry (clock readings, filled in by the engine)
     submit_t: Optional[float] = None
     first_token_t: Optional[float] = None
@@ -66,6 +68,19 @@ class Request:
         dataclasses.field(default=None, repr=False, compare=False)
     on_finish: Optional[Callable[["Request"], None]] = \
         dataclasses.field(default=None, repr=False, compare=False)
+    _finish_fired: bool = \
+        dataclasses.field(default=False, repr=False, compare=False)
+
+    def fire_finish(self) -> bool:
+        """Invoke ``on_finish`` exactly once, no matter how many terminal
+        paths (shed, drain truncation, engine failure, normal completion)
+        reach this request.  Returns True on the first (real) firing."""
+        if self._finish_fired:
+            return False
+        self._finish_fired = True
+        if self.on_finish is not None:
+            self.on_finish(self)
+        return True
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -91,6 +106,8 @@ class Request:
     def status(self) -> str:
         if self.shed:
             return "shed"
+        if self.cancelled:
+            return "cancelled"
         if self.truncated:
             return "truncated"
         if self.done:
@@ -171,8 +188,7 @@ class SlotScheduler:
         if self.clock is not None:
             req.finish_t = self.clock()
         self.shed_requests.append(req)
-        if req.on_finish is not None:
-            req.on_finish(req)
+        req.fire_finish()
 
     def expire_deadlines(self) -> List[Request]:
         """Shed queued requests whose TTFT deadline has already passed

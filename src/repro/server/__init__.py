@@ -10,7 +10,7 @@
   p50/p99 TTFT / tokens-per-s / shed-rate envelope (``BENCH_traffic.json``).
 - ``client``: minimal streaming HTTP client for tests and examples.
 """
-from .client import GenerateResult, get_json, stream_generate
+from .client import GenerateResult, RetryPolicy, get_json, stream_generate
 from .frontend import ServeFrontend
 from .harness import (LoadHarness, TrafficMetrics, VirtualClock,
                       overload_rate_rps)
@@ -18,7 +18,8 @@ from .traffic import (TraceEvent, TrafficConfig, TrafficGenerator,
                       load_trace, save_trace)
 
 __all__ = [
-    "GenerateResult", "LoadHarness", "ServeFrontend", "TraceEvent",
+    "GenerateResult", "LoadHarness", "RetryPolicy", "ServeFrontend",
+    "TraceEvent",
     "TrafficConfig", "TrafficGenerator", "TrafficMetrics", "VirtualClock",
     "get_json", "load_trace", "overload_rate_rps", "save_trace",
     "stream_generate",

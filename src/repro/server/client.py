@@ -12,7 +12,49 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import json
-from typing import Any, Dict, List, Optional, Sequence
+import random
+from typing import (Any, Awaitable, Callable, Dict, List, Optional, Sequence,
+                    Tuple)
+
+#: Transport failures worth retrying (the server went away mid-exchange or
+#: never answered) — as opposed to protocol errors, which never heal.
+RETRYABLE_ERRORS = (ConnectionError, asyncio.IncompleteReadError,
+                    asyncio.TimeoutError, OSError)
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Exponential backoff with seeded jitter for ``stream_generate``.
+
+    Attempt ``k`` (0-based) sleeps ``backoff_s * multiplier**k``, scaled by a
+    uniform jitter in ``[1 - jitter, 1 + jitter]`` drawn from a private
+    ``random.Random(seed)`` — deterministic per policy instance, and spread
+    out across instances seeded differently so a shed thundering herd
+    doesn't re-arrive in lockstep.  A 503's ``Retry-After`` header, when
+    longer, takes precedence over the computed backoff."""
+
+    max_retries: int = 3
+    backoff_s: float = 0.05
+    multiplier: float = 2.0
+    jitter: float = 0.1              # fraction of the delay, uniform +/-
+    seed: int = 0
+    retry_statuses: Tuple[int, ...] = (503,)
+
+    def __post_init__(self) -> None:
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, "
+                             f"got {self.max_retries}")
+        if not 0.0 <= self.jitter < 1.0:
+            raise ValueError(f"jitter must be in [0, 1), got {self.jitter}")
+        self._rng = random.Random(self.seed)
+
+    def delay_s(self, attempt: int,
+                retry_after_s: Optional[float] = None) -> float:
+        base = self.backoff_s * self.multiplier ** attempt
+        base *= 1.0 + self.jitter * self._rng.uniform(-1.0, 1.0)
+        if retry_after_s is not None:
+            base = max(base, retry_after_s)
+        return base
 
 
 @dataclasses.dataclass
@@ -21,6 +63,8 @@ class GenerateResult:
     http_status: int
     tokens: List[int]
     summary: Dict[str, Any]          # final NDJSON line (or the error body)
+    headers: Dict[str, str] = dataclasses.field(default_factory=dict)
+    attempts: int = 1                # 1 = first try succeeded / no retry
 
     @property
     def status(self) -> str:
@@ -33,7 +77,12 @@ class GenerateResult:
 
 async def _read_headers(reader: asyncio.StreamReader):
     status_line = (await reader.readline()).decode("latin-1").strip()
-    http_status = int(status_line.split()[1])
+    parts = status_line.split()
+    if len(parts) < 2 or not parts[1].isdigit():
+        # the server died (or reset) before answering: surface it as the
+        # retryable incomplete-read it is, not a parse crash
+        raise asyncio.IncompleteReadError(status_line.encode("latin-1"), None)
+    http_status = int(parts[1])
     headers: Dict[str, str] = {}
     while True:
         raw = await reader.readline()
@@ -72,7 +121,7 @@ async def _request(host: str, port: int, method: str, path: str,
         await writer.drain()
         http_status, headers = await _read_headers(reader)
         payload = await _read_body(reader, headers)
-        return http_status, payload
+        return http_status, headers, payload
     finally:
         writer.close()
         try:
@@ -82,23 +131,57 @@ async def _request(host: str, port: int, method: str, path: str,
 
 
 async def get_json(host: str, port: int, path: str) -> Dict[str, Any]:
-    status, payload = await _request(host, port, "GET", path)
+    status, _, payload = await _request(host, port, "GET", path)
     out = json.loads(payload or b"{}")
     out["_http_status"] = status
     return out
+
+
+def _parse_retry_after(headers: Dict[str, str]) -> Optional[float]:
+    raw = headers.get("retry-after")
+    try:
+        return None if raw is None else float(raw)
+    except ValueError:
+        return None
 
 
 async def stream_generate(host: str, port: int, prompt: Sequence[int],
                           max_new_tokens: int = 8,
                           priority: str = "normal",
                           deadline_s: Optional[float] = None,
-                          timeout_s: float = 120.0) -> GenerateResult:
+                          timeout_s: float = 120.0,
+                          retry: Optional[RetryPolicy] = None,
+                          sleep: Callable[[float], Awaitable[None]]
+                          = asyncio.sleep) -> GenerateResult:
+    """One /v1/generate stream, optionally retried under ``retry``.
+
+    Retries fire on retryable transport errors and on the policy's
+    ``retry_statuses`` (503 overload by default), honouring the server's
+    ``Retry-After``.  ``sleep`` is injectable so tests assert the backoff
+    schedule without waiting it out.  With ``retry=None`` a transport error
+    propagates, as before."""
     body = json.dumps({
         "prompt": list(prompt), "max_new_tokens": max_new_tokens,
         "priority": priority, "deadline_s": deadline_s,
     }).encode()
-    status, payload = await asyncio.wait_for(
-        _request(host, port, "POST", "/v1/generate", body), timeout_s)
+    max_attempts = 1 + (retry.max_retries if retry is not None else 0)
+    attempt = 0
+    while True:
+        try:
+            status, headers, payload = await asyncio.wait_for(
+                _request(host, port, "POST", "/v1/generate", body), timeout_s)
+        except RETRYABLE_ERRORS:
+            if retry is None or attempt + 1 >= max_attempts:
+                raise
+            await sleep(retry.delay_s(attempt))
+            attempt += 1
+            continue
+        if retry is not None and status in retry.retry_statuses \
+                and attempt + 1 < max_attempts:
+            await sleep(retry.delay_s(attempt, _parse_retry_after(headers)))
+            attempt += 1
+            continue
+        break
     tokens: List[int] = []
     summary: Dict[str, Any] = {}
     for line in payload.decode().splitlines():
@@ -109,4 +192,5 @@ async def stream_generate(host: str, port: int, prompt: Sequence[int],
             tokens.append(int(obj["token"]))
         else:
             summary = obj
-    return GenerateResult(http_status=status, tokens=tokens, summary=summary)
+    return GenerateResult(http_status=status, tokens=tokens, summary=summary,
+                          headers=dict(headers), attempts=attempt + 1)

@@ -46,20 +46,38 @@ _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
             503: "Service Unavailable"}
 
 
-def _json_response(status: int, obj: Dict[str, Any]) -> bytes:
+#: 503 responses advertise this via ``Retry-After`` so well-behaved clients
+#: (``repro.server.client.RetryPolicy`` honours it) back off together.
+RETRY_AFTER_S = 1
+
+
+def _json_response(status: int, obj: Dict[str, Any],
+                   headers: Optional[Dict[str, str]] = None) -> bytes:
     body = json.dumps(obj).encode()
+    extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
     return (f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}\r\n"
             f"Content-Type: application/json\r\n"
             f"Content-Length: {len(body)}\r\n"
-            f"Connection: close\r\n\r\n").encode() + body
+            f"{extra}Connection: close\r\n\r\n").encode() + body
+
+
+def _unavailable(obj: Dict[str, Any]) -> bytes:
+    """503 with the backpressure header every shed/overload path shares."""
+    return _json_response(503, obj,
+                          headers={"Retry-After": str(RETRY_AFTER_S)})
 
 
 class ServeFrontend:
     """Asyncio HTTP server wrapping one ``ServeEngine``."""
 
-    def __init__(self, engine, pump_idle_s: float = 0.005):
+    def __init__(self, engine, pump_idle_s: float = 0.005,
+                 request_timeout_s: Optional[float] = None):
         self.engine = engine
         self._pump_idle_s = pump_idle_s
+        # wall-clock budget per /v1/generate request (None: unbounded).  On
+        # expiry the request is cancelled — the engine reaps its slot — and
+        # the client sees a 503 (pre-stream) or a terminal "cancelled" line.
+        self._request_timeout_s = request_timeout_s
         # one lock serializes scheduler mutation (handler submits) against
         # the pump's engine.step(); the pump holds it per step, so handler
         # submission latency is bounded by one model call
@@ -88,6 +106,17 @@ class ServeFrontend:
                     self._work.clear()
         except BaseException as e:            # surface, never die silently
             self._pump_error = e
+            self._fail_open()
+
+    def _fail_open(self) -> None:
+        """The pump died: terminate every live stream cleanly instead of
+        leaving clients blocked on an events queue that will never fill.
+        ``fire_finish`` is idempotent, so this cannot double-deliver."""
+        sched = self.engine.scheduler
+        for req in list(sched.active.values()) + list(sched.pending):
+            if not req.done:
+                req.done = req.truncated = True
+            req.fire_finish()
 
     # ---- lifecycle -----------------------------------------------------------
 
@@ -151,6 +180,8 @@ class ServeFrontend:
             "completed": s.completed,
             "truncated": s.truncated,
             "shed": sched.n_shed,
+            "cancelled": s.cancelled,
+            "pump_alive": self._pump_error is None,
             "shed_rate": sched.n_shed / max(s.admitted + sched.n_shed
                                             + sched.n_pending, 1),
             "tokens_generated": s.tokens_generated,
@@ -230,14 +261,22 @@ class ServeFrontend:
             priority=priority,
             deadline_s=None if deadline is None else float(deadline))
 
+    async def _next_event(self, events: asyncio.Queue, deadline: Optional[float],
+                          loop: asyncio.AbstractEventLoop):
+        if deadline is None:
+            return await events.get()
+        return await asyncio.wait_for(events.get(),
+                                      max(deadline - loop.time(), 0.0))
+
     async def _generate(self, writer: asyncio.StreamWriter,
                         body: bytes) -> None:
         req = self._parse_generate(body)
         if self._draining:
-            writer.write(_json_response(
-                503, {"error": "draining", "uid": req.uid}))
+            writer.write(_unavailable({"error": "draining", "uid": req.uid}))
             return
         loop = asyncio.get_running_loop()
+        deadline = (None if self._request_timeout_s is None
+                    else loop.time() + self._request_timeout_s)
         events: asyncio.Queue = asyncio.Queue()
         req.on_token = lambda r, tok: loop.call_soon_threadsafe(
             events.put_nowait, ("token", tok))
@@ -247,30 +286,54 @@ class ServeFrontend:
             accepted = self.engine.submit(req)
         self._work.set()
         if not accepted:
-            writer.write(_json_response(503, self._shed_payload(req)))
+            writer.write(_unavailable(self._shed_payload(req)))
             return
         # defer the status line until the engine says something: a request
         # shed from the queue gets a 503, not an empty 200 stream
-        kind, tok = await events.get()
+        try:
+            kind, tok = await self._next_event(events, deadline, loop)
+        except asyncio.TimeoutError:
+            req.cancelled = True               # engine reaps the slot/queue
+            self._work.set()
+            writer.write(_unavailable(
+                {"error": "timeout", "uid": req.uid, "status": "cancelled",
+                 "timeout_s": self._request_timeout_s}))
+            return
         if kind == "finish" and req.shed:
-            writer.write(_json_response(503, self._shed_payload(req)))
+            writer.write(_unavailable(self._shed_payload(req)))
             return
         writer.write(b"HTTP/1.1 200 OK\r\n"
                      b"Content-Type: application/x-ndjson\r\n"
                      b"Transfer-Encoding: chunked\r\n"
                      b"Connection: close\r\n\r\n")
-        while True:
-            if kind == "token":
-                await self._chunk(writer, {"token": tok})
-            elif kind == "finish":
-                await self._chunk(writer, {
-                    "done": True, "uid": req.uid, "status": req.status,
-                    "n_tokens": len(req.out_tokens),
-                    "ttft_s": req.ttft_s,
-                    "deadline_met": req.deadline_met(),
-                })
-                break
-            kind, tok = await events.get()
+        try:
+            while True:
+                if kind == "token":
+                    await self._chunk(writer, {"token": tok})
+                elif kind == "finish":
+                    await self._chunk(writer, {
+                        "done": True, "uid": req.uid, "status": req.status,
+                        "n_tokens": len(req.out_tokens),
+                        "ttft_s": req.ttft_s,
+                        "deadline_met": req.deadline_met(),
+                    })
+                    break
+                try:
+                    kind, tok = await self._next_event(events, deadline, loop)
+                except asyncio.TimeoutError:
+                    req.cancelled = True
+                    self._work.set()
+                    await self._chunk(writer, {
+                        "done": True, "uid": req.uid, "status": "cancelled",
+                        "n_tokens": len(req.out_tokens),
+                        "error": "timeout",
+                        "timeout_s": self._request_timeout_s})
+                    break
+        except (ConnectionResetError, BrokenPipeError):
+            # client went away mid-stream: release the decode slot
+            req.cancelled = True
+            self._work.set()
+            raise
         writer.write(b"0\r\n\r\n")             # chunked stream terminator
 
     def _shed_payload(self, req: Request) -> Dict[str, Any]:

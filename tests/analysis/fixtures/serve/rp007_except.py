@@ -1,0 +1,8 @@
+"""RP007 fixture: a pass-only broad except in the serving path."""
+
+
+def reap(queue):
+    try:
+        return queue.pop()
+    except Exception:
+        pass

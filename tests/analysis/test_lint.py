@@ -20,6 +20,7 @@ CASES = [
     ("hwloop/rp004_random.py", "RP004"),
     ("common/rp005_mutable.py", "RP005"),
     ("kernels/rp006_blocks.py", "RP006"),
+    ("serve/rp007_except.py", "RP007"),
 ]
 
 
@@ -92,8 +93,43 @@ def test_baseline_counts_duplicates(tmp_path):
 
 
 def test_rule_registry_complete():
-    assert rule_codes() == [f"RP00{i}" for i in range(1, 7)]
+    assert rule_codes() == [f"RP00{i}" for i in range(1, 8)]
     assert all(r.fix_hint and r.description for r in RULES)
+
+
+def test_rp007_variants():
+    # bare except is flagged regardless of what the body does
+    bare = ("def f(q):\n"
+            "    try:\n"
+            "        return q.pop()\n"
+            "    except:\n"
+            "        return None\n")
+    assert [f.code for f in lint_source(bare, "server/x.py")] == ["RP007"]
+    # narrow-typed pass is the sanctioned client-went-away idiom
+    narrow = ("def f(w):\n"
+              "    try:\n"
+              "        w.close()\n"
+              "    except (ConnectionResetError, BrokenPipeError):\n"
+              "        pass\n")
+    assert lint_source(narrow, "server/x.py") == []
+    # a broad except that HANDLES the fault (surfaces it) is fine
+    handled = ("def f(q, log):\n"
+               "    try:\n"
+               "        return q.pop()\n"
+               "    except Exception as e:\n"
+               "        log.append(e)\n"
+               "        raise\n")
+    assert lint_source(handled, "serve/x.py") == []
+    # ...but a pass-only broad except swallows it
+    swallowed = ("def f(q):\n"
+                 "    try:\n"
+                 "        return q.pop()\n"
+                 "    except BaseException:\n"
+                 "        ...\n")
+    assert [f.code for f in lint_source(swallowed, "hwloop/x.py")] == \
+        ["RP007"]
+    # out of scope: the rule only polices the serving/hardware path
+    assert lint_source(swallowed, "models/x.py") == []
 
 
 def test_repo_src_is_clean_under_checked_in_baseline():

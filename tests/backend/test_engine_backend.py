@@ -3,7 +3,6 @@ voltage-scaled array, per-step flag/energy telemetry in EngineStats, and the
 hwloop session as a thin watchdog adapter over the real GEMM flags."""
 
 import json
-import os
 
 import jax
 import numpy as np
@@ -15,14 +14,10 @@ from repro.models import model_api
 from repro.serve import Request, ServeEngine
 
 # Serving on the emulated backend routes every decode GEMM through
-# jax.pure_callback; with a single CPU core XLA's callback executor and the
-# jit'd decode step starve each other and the test deadlocks (reproducible
-# at the parent commit too).  Multi-core hosts — including CI runners — are
-# unaffected.
-needs_multicore = pytest.mark.skipif(
-    (os.cpu_count() or 1) == 1,
-    reason="emulated-backend serving deadlocks on single-core hosts "
-           "(pure_callback executor starves against the jit'd decode step)")
+# jax.pure_callback.  On single-core hosts these tests used to deadlock (the
+# callback ran on XLA's only compute thread and starved the jit'd decode
+# step); the repo-wide conftest now forces a second virtual host device via
+# ensure_host_callback_capacity(), so they run everywhere.
 
 
 @pytest.fixture(scope="module")
@@ -41,7 +36,6 @@ def _drain(cfg, params, n_req=2, max_new=3, **engine_kw):
     return eng, eng.run_until_drained(), reqs
 
 
-@needs_multicore
 def test_emulated_backend_serves_all_decode_gemms(dense):
     cfg, params = dense
     be = get_backend("emulated")                 # nominal rails: zero flags
@@ -81,7 +75,6 @@ def test_ideal_backend_is_a_zero_overhead_passthrough(dense):
     assert stats_none.backend is None
 
 
-@needs_multicore
 def test_hwloop_session_becomes_thin_adapter_over_backend(dense):
     """With an emulated backend the session stops generating probe traffic:
     the real GEMM flags feed its watchdog, and a mid-serve undervolt of the

@@ -1,0 +1,145 @@
+"""Silent-corruption models (repro.hwloop.inject): registry, hand-checkable
+per-model semantics, determinism under a fixed seed, and corruption-rate
+scaling as rails drop through the crash region."""
+
+import numpy as np
+import pytest
+
+from repro.backend import EmulatedBackend
+from repro.hwloop.inject import (CORRUPTION_MODELS, bit_flip, get_corruption,
+                                 stale_psum, te_drop)
+
+#: Deep in the vtr-22nm crash region — every partition silently corrupts
+#: (pinned by tests/hwloop/test_device.py and the resilience chaos campaign).
+V_CRASH = 0.58
+
+
+def _terms(m=6, k=4, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-3, 4, size=(m, k)).astype(np.float64)
+    w = rng.integers(-3, 4, size=(k, n)).astype(np.float64)
+    return a[:, :, None] * w[None, :, :]          # (M, K, N) rank-1 terms
+
+
+# ---- registry ---------------------------------------------------------------
+
+
+def test_registry_names_and_lookup():
+    assert {"stale", "tedrop", "bitflip"} <= set(CORRUPTION_MODELS)
+    assert get_corruption("stale") is stale_psum
+    with pytest.raises(KeyError, match="unknown corruption model"):
+        get_corruption("bit_flip")                # underscore spelling is not
+        # registered — configs must use the canonical short names
+
+
+# ---- per-model semantics ----------------------------------------------------
+
+
+def test_all_models_exact_when_nothing_is_silent():
+    terms = _terms()
+    silent = np.zeros(terms.shape, dtype=bool)
+    rng = np.random.default_rng(0)
+    exact = terms.sum(axis=1)
+    for name in ("stale", "tedrop", "bitflip"):
+        out = get_corruption(name)(terms, silent, rng)
+        assert np.array_equal(out, exact), name
+
+
+def test_tedrop_zeroes_exactly_the_silent_terms():
+    terms = _terms(seed=1)
+    rng = np.random.default_rng(1)
+    silent = rng.random(terms.shape) < 0.15
+    out = te_drop(terms, silent, rng)
+    exact = terms.sum(axis=1)
+    assert np.allclose(out, exact - np.where(silent, terms, 0.0).sum(axis=1))
+    hit = silent.any(axis=1)
+    clean_unchanged = np.array_equal(out[~hit], exact[~hit])
+    assert clean_unchanged                        # error stays localized
+
+
+def test_bitflip_perturbs_only_hit_elements_and_stays_finite():
+    rng = np.random.default_rng(2)
+    terms = rng.uniform(0.5, 2.0, size=(6, 4, 5))  # positive: outputs != 0
+    silent = rng.random(terms.shape) < 0.1
+    out = bit_flip(terms, silent, rng)
+    exact = terms.sum(axis=1)
+    hit = silent.any(axis=1)
+    assert np.array_equal(out[~hit], exact[~hit])
+    assert (out[hit] != exact[hit]).all()         # every hit element flipped
+    # bit 40 of the f64 mantissa: a ~2^-12 relative perturbation, no inf/nan
+    rel = np.abs(out[hit] - exact[hit]) / np.abs(exact[hit])
+    assert np.isfinite(out).all()
+    assert 0 < rel.max() < 1e-2
+
+
+def test_stale_forward_fills_from_last_clean_row():
+    # hand-traceable case: one silent MAC at (row, stage, col) = (1, 1, 0)
+    m, k, n = 3, 3, 2
+    terms = np.arange(m * k * n, dtype=np.float64).reshape(m, k, n) + 1.0
+    silent = np.zeros((m, k, n), dtype=bool)
+    silent[1, 1, 0] = True
+    out = stale_psum(terms, silent, np.random.default_rng(0))
+    exact = terms.sum(axis=1)
+    # the corrupted element inherits row 0's psum at stage 1, then accrues
+    # its own remaining terms
+    expect = terms[0, :2, 0].sum() + terms[1, 2, 0]
+    assert out[1, 0] == expect
+    # everything else is untouched
+    mask = np.ones_like(exact, dtype=bool)
+    mask[1, 0] = False
+    assert np.array_equal(out[mask], exact[mask])
+
+    # a silent MAC in row 0 has no clean row above: its psum resets to zero
+    silent = np.zeros((m, k, n), dtype=bool)
+    silent[0, 0, 1] = True
+    out = stale_psum(terms, silent, np.random.default_rng(0))
+    assert out[0, 1] == terms[0, 1:, 1].sum()
+
+
+# ---- device-level behaviour -------------------------------------------------
+
+
+def _collapsed(corruption, seed=2021):
+    be = EmulatedBackend.nominal(corruption=corruption, seed=seed)
+    accel = be.accel
+    accel.set_rails(np.full(accel.n_partitions, V_CRASH))
+    return accel
+
+
+def _corrupted_fraction(accel, rounds=6, seed=3):
+    rng = np.random.default_rng(seed)
+    bad = total = 0
+    for _ in range(rounds):
+        a = rng.integers(-4, 5, size=(16, 8)).astype(np.float64)
+        w = rng.integers(-4, 5, size=(8, 8)).astype(np.float64)
+        out, _ = accel.matmul(a, w)
+        bad += int(np.sum(np.asarray(out) != a @ w))
+        total += out.size
+    return bad / total
+
+
+@pytest.mark.parametrize("corruption", ["stale", "tedrop", "bitflip"])
+def test_corruption_deterministic_under_fixed_seed(corruption):
+    outs = []
+    for _ in range(2):                            # two independent devices
+        accel = _collapsed(corruption)
+        rng = np.random.default_rng(5)
+        a = rng.normal(size=(16, 8))
+        w = rng.normal(size=(8, 8))
+        out, tel = accel.matmul(a, w)
+        outs.append((np.asarray(out).copy(), int(tel.silent_p.sum())))
+    assert np.array_equal(outs[0][0], outs[1][0])
+    assert outs[0][1] == outs[1][1] > 0           # same silent-failure count
+
+
+def test_corruption_rate_scales_with_rail_undervolt():
+    be = EmulatedBackend.nominal(corruption="bitflip")
+    accel = be.accel
+    v_nom = float(accel.timing.tech.v_nom)
+    rates = []
+    for v in (v_nom, 0.66, V_CRASH):              # deeper and deeper droop
+        accel.set_rails(np.full(accel.n_partitions, v))
+        rates.append(_corrupted_fraction(accel))
+    assert rates[0] == 0.0                        # nominal rails: clean
+    assert rates[-1] > 0.0                        # crash region: corrupted
+    assert rates == sorted(rates)                 # monotone in undervolt

@@ -1,0 +1,56 @@
+"""Chaos campaign harness: scenario registry, report aggregation, and two
+end-to-end scenarios at reduced scale (one engine-level, one full-stack
+HTTP) — the full six-scenario campaign runs in the resilience benchmark and
+the CI resilience-smoke job."""
+
+import json
+
+import pytest
+
+from repro.resilience import (ChaosReport, ScenarioResult, SCENARIOS,
+                              run_campaign, run_scenario)
+
+
+def test_scenario_registry():
+    assert set(SCENARIOS) == {"silent_burst", "rail_droop", "watchdog_delay",
+                              "slow_decode", "client_disconnect",
+                              "overload_shed"}
+    with pytest.raises(KeyError):
+        run_scenario("rowhammer")
+
+
+def test_report_aggregation_and_json():
+    rep = ChaosReport(results=[
+        ScenarioResult("a", ok=True, violations=[],
+                       details={"crashed": 0, "corrupted_streams": 0}),
+        ScenarioResult("b", ok=False, violations=["stream 1 corrupted"],
+                       details={"crashed": 1, "corrupted_streams": 2}),
+    ], elapsed_s=1.5)
+    assert not rep.ok
+    assert rep.crashes == 1 and rep.corrupted_streams == 2
+    d = json.loads(json.dumps(rep.to_dict()))      # plain JSON
+    assert d["ok"] is False and len(d["scenarios"]) == 2
+
+
+def test_silent_burst_scenario_end_to_end():
+    """Engine-level: repeated rail collapses into the silent region; the
+    guard keeps every stream bit-clean and the per-step telemetry shows it."""
+    res = run_scenario("silent_burst", fast=True, seed=0)
+    assert res.ok, res.violations
+    assert res.details["crashed"] == 0
+    assert res.details["corrupted_streams"] == 0
+    assert res.details["guard_detected"] >= 1
+    assert res.details["guard_heals"] >= 1
+    assert res.details["guard_uncorrected"] == 0
+    assert res.details["guard_step_events"] >= 1
+
+
+def test_overload_shed_scenario_end_to_end():
+    """Full HTTP stack: bounded-queue shed with Retry-After, a retrying
+    client that eventually lands, and balanced terminal accounting."""
+    rep = run_campaign(fast=True, only=["overload_shed"])
+    assert rep.ok, [r.violations for r in rep.results]
+    d = rep.results[0].details
+    assert d["shed"] >= 1
+    assert d["shed"] + d["completed"] == d["requests"]
+    assert rep.crashes == 0 and rep.corrupted_streams == 0

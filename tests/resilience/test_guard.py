@@ -1,0 +1,194 @@
+"""GuardedBackend: ABFT verification, single-element locate-and-correct,
+the escalation ladder (retry -> rail heal -> policy), and the PR's
+acceptance criterion — SILENT corruption at crash-region rails restored to
+outputs bit-identical to the ideal backend."""
+
+import numpy as np
+import pytest
+
+from repro.backend import EmulatedBackend, IdealBackend, get_backend
+from repro.resilience import GuardedBackend, GuardError
+from repro.resilience.chaos import V_CRASH
+
+#: The parity-matrix shapes (tests/backend/test_parity.py) the acceptance
+#: criterion is stated over.
+SHAPES = [(8, 8, 8), (16, 24, 8), (12, 40, 20)]
+
+
+def _int_ops(m, k, n, seed):
+    """Integer-valued f32 operands: f64 checksums are exact, so a verified
+    product is bit-identical to the ideal one."""
+    rng = np.random.default_rng(seed)
+    return (rng.integers(-4, 5, size=(m, k)).astype(np.float32),
+            rng.integers(-4, 5, size=(k, n)).astype(np.float32))
+
+
+def _crashed_guard(corruption="bitflip", **kw):
+    guard = GuardedBackend(EmulatedBackend.nominal(corruption=corruption),
+                           **kw)
+    accel = guard.accel
+    accel.set_rails(np.full(accel.n_partitions, V_CRASH))
+    return guard
+
+
+# ---- acceptance: bit-identical restoration under silent corruption ----------
+
+
+@pytest.mark.parametrize("corruption", ["bitflip", "stale", "tedrop"])
+@pytest.mark.parametrize("shape", SHAPES, ids=["%dx%dx%d" % s for s in SHAPES])
+def test_guard_restores_bit_identical_outputs(corruption, shape):
+    m, k, n = shape
+    a, b = _int_ops(m, k, n, seed=m + k + n)
+    ref, _ = IdealBackend().matmul(a, b)
+
+    # the unguarded device at these rails really corrupts this product
+    raw_be = EmulatedBackend.nominal(corruption=corruption)
+    raw_be.accel.set_rails(np.full(raw_be.accel.n_partitions, V_CRASH))
+    raw, _ = raw_be.matmul(a, b)
+    assert not np.array_equal(np.asarray(raw), np.asarray(ref))
+
+    # ...and the guard's ladder (detect -> retry -> heal) restores it
+    guard = _crashed_guard(corruption=corruption)
+    out, tel = guard.matmul(a, b)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    assert tel.guard_detected >= 1
+    assert tel.guard_heals == 1          # deterministic fault: heal required
+    assert tel.guard_uncorrected == 0
+    assert tel.calls == 1                # one protocol call despite re-runs
+    # healed: rails are back at (or above) the crash region
+    assert float(guard.accel.rails.min()) > V_CRASH
+
+
+def test_heal_restores_nominal_rails_without_session():
+    guard = _crashed_guard()
+    a, b = _int_ops(8, 8, 8, seed=1)
+    guard.matmul(a, b)
+    v_nom = float(guard.accel.timing.tech.v_nom)
+    assert np.allclose(guard.accel.rails, v_nom)
+
+
+def test_heal_via_attached_session_watchdog():
+    from repro.flow import FlowConfig
+    from repro.hwloop import HwLoopSession
+
+    session = HwLoopSession(
+        FlowConfig(array_n=8, tech="vtr-22nm", max_trials=8, seed=2021),
+        probe_rows=8, rail_margin=0.02, patience=2)
+    guard = GuardedBackend(EmulatedBackend(session.accel), session=session)
+    session.accel.set_rails(np.full(session.accel.rails.shape[0], V_CRASH))
+    a, b = _int_ops(8, 8, 8, seed=2)
+    ref, _ = IdealBackend().matmul(a, b)
+    out, tel = guard.matmul(a, b)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    assert tel.guard_heals == 1
+    assert session.recalibrations >= 1   # healed THROUGH the watchdog
+    assert float(session.accel.rails.min()) > V_CRASH
+
+
+# ---- locate-and-correct -----------------------------------------------------
+
+
+def _flaky_ideal(n_bad=1, delta=7.0, at=(2, 3)):
+    """An ideal inner whose first ``n_bad`` executions corrupt one element —
+    the single-element signature ABFT corrects without re-execution."""
+    inner = IdealBackend()
+    real = inner._execute
+    calls = {"n": 0}
+
+    def flaky(a, b):
+        out, tel = real(a, b)
+        out = np.asarray(out, dtype=np.float64).copy()
+        calls["n"] += 1
+        if calls["n"] <= n_bad:
+            out[at] += delta
+        return out, tel
+
+    inner._execute = flaky
+    return inner, calls
+
+
+def test_abft_corrects_single_element_in_place():
+    inner, calls = _flaky_ideal()
+    guard = GuardedBackend(inner, mode="abft")
+    a, b = _int_ops(8, 8, 8, seed=3)
+    out, tel = guard.matmul(a, b)
+    assert np.array_equal(np.asarray(out),
+                          a.astype(np.float64) @ b.astype(np.float64))
+    assert calls["n"] == 1               # corrected WITHOUT re-execution
+    assert tel.guard_detected == 1
+    assert tel.guard_corrected == 1
+    assert tel.guard_retries == 0 and tel.guard_heals == 0
+
+
+def test_freivalds_detects_and_recovers_by_retry():
+    # detection-only mode cannot localize: it must re-execute instead
+    inner, calls = _flaky_ideal()
+    guard = GuardedBackend(inner, mode="freivalds")
+    a, b = _int_ops(8, 8, 8, seed=4)
+    out, tel = guard.matmul(a, b)
+    assert np.array_equal(np.asarray(out),
+                          a.astype(np.float64) @ b.astype(np.float64))
+    assert calls["n"] == 2               # one retry cleared the transient
+    assert tel.guard_detected == 1
+    assert tel.guard_retries == 1 and tel.guard_corrected == 0
+
+
+# ---- policy rungs -----------------------------------------------------------
+
+
+def test_fail_closed_raises_on_unhealable_corruption():
+    inner, _ = _flaky_ideal(n_bad=10 ** 9)          # corrupts forever
+    guard = GuardedBackend(inner, mode="freivalds", max_retries=1,
+                           heal=False, policy="fail_closed")
+    a, b = _int_ops(8, 8, 8, seed=5)
+    with pytest.raises(GuardError):
+        guard.matmul(a, b)
+
+
+def test_fail_open_returns_flagged_product():
+    inner, _ = _flaky_ideal(n_bad=10 ** 9)
+    guard = GuardedBackend(inner, mode="freivalds", max_retries=1,
+                           heal=False, policy="fail_open")
+    a, b = _int_ops(8, 8, 8, seed=6)
+    out, tel = guard.matmul(a, b)
+    assert tel.guard_uncorrected == 1    # honest telemetry about the escape
+    assert not np.array_equal(np.asarray(out),
+                              a.astype(np.float64) @ b.astype(np.float64))
+
+
+def test_mode_off_is_transparent():
+    guard = _crashed_guard(mode="off")
+    a, b = _int_ops(8, 8, 8, seed=7)
+    out, tel = guard.matmul(a, b)
+    assert tel.guard_checks == 0 and tel.guard_detected == 0
+    # pass-through: the corrupted product flows out unverified
+    assert not np.array_equal(np.asarray(out),
+                              a.astype(np.float64) @ b.astype(np.float64))
+
+
+# ---- wiring -----------------------------------------------------------------
+
+
+def test_constructor_validation_and_registry():
+    with pytest.raises(ValueError):
+        GuardedBackend(IdealBackend(), mode="checksum")
+    with pytest.raises(ValueError):
+        GuardedBackend(IdealBackend(), policy="retry")
+    with pytest.raises(ValueError):
+        GuardedBackend(IdealBackend(), max_retries=-1)
+    be = get_backend("guarded")
+    assert isinstance(be, GuardedBackend)
+    assert be.is_guarded and not be.is_ideal
+    assert be.name == "guarded[emulated]"
+    assert be.summary()["mode"] == "abft"
+
+
+def test_summary_surfaces_inner_energy_accounting():
+    guard = GuardedBackend(EmulatedBackend.nominal())
+    a, b = _int_ops(8, 8, 8, seed=8)
+    guard.matmul(a, b)
+    guard.add_tokens(1)
+    s = guard.summary()
+    assert s["inner"]["backend"] == "emulated"
+    assert s["energy_per_token_j"] is not None
+    assert s["energy_per_token_j"] > 0

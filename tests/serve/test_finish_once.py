@@ -1,0 +1,121 @@
+"""Exactly-once ``on_finish`` delivery: every admitted (or shed) request
+fires its finish callback exactly once, on every terminal path — shed,
+drain truncation, cancellation, pump fail-open, and the wave engine."""
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_api
+from repro.serve import Request, ServeEngine, WaveServeEngine
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("starcoder2-3b", smoke=True)
+    api = model_api(cfg)
+    return cfg, api.init_params(jax.random.PRNGKey(0))
+
+
+def _counted(uid, counts, **kw):
+    req = Request(uid=uid, prompt=[3 + uid, 4 + uid], **kw)
+    counts[uid] = 0
+
+    def on_finish(r):
+        counts[r.uid] += 1
+
+    req.on_finish = on_finish
+    return req
+
+
+def test_completed_and_shed_fire_finish_once(dense):
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, slots=1, max_len=32, policy="priority",
+                      max_pending=1)
+    counts = {}
+    reqs = [_counted(i, counts, max_new_tokens=2) for i in range(4)]
+    accepted = [eng.submit(r) for r in reqs]
+    assert not all(accepted)                      # the 1-deep queue shed some
+    eng.run_until_drained()
+    assert all(n == 1 for n in counts.values()), counts
+    for r, acc in zip(reqs, accepted):
+        assert r.status == ("shed" if not acc else
+                            "completed" if not r.truncated else "truncated")
+        if not acc:
+            assert r.shed_reason == "queue_full"
+
+
+def test_drain_truncation_fires_finish_once(dense):
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, slots=2, max_len=32)
+    counts = {}
+    reqs = [_counted(i, counts, max_new_tokens=500) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained(max_steps=3)            # budget exhausts mid-decode
+    assert all(r.status == "truncated" for r in reqs)
+    assert all(n == 1 for n in counts.values()), counts
+    # draining again must not re-deliver
+    eng.run_until_drained(max_steps=3)
+    assert all(n == 1 for n in counts.values()), counts
+
+
+def test_cancellation_fires_finish_once_and_is_counted(dense):
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, slots=2, max_len=32)
+    counts = {}
+    reqs = [_counted(i, counts, max_new_tokens=6) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                                    # both admitted
+    reqs[0].cancelled = True                      # client went away
+    stats = eng.run_until_drained()
+    assert reqs[0].status == "cancelled" and reqs[0].done
+    assert reqs[1].status == "completed"
+    assert stats.cancelled == 1 and stats.completed == 1
+    assert counts == {0: 1, 1: 1}
+
+
+def test_cancelled_request_is_reaped_from_pending_queue(dense):
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, slots=1, max_len=32)
+    counts = {}
+    reqs = [_counted(i, counts, max_new_tokens=3) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    reqs[2].cancelled = True                      # cancelled while queued
+    stats = eng.run_until_drained()
+    assert reqs[2].status == "cancelled"
+    assert len(reqs[2].out_tokens) == 0           # never reached a slot
+    assert stats.cancelled == 1
+    assert counts == {0: 1, 1: 1, 2: 1}
+
+
+def test_pump_fail_open_is_idempotent(dense):
+    from repro.server import ServeFrontend
+
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, slots=2, max_len=32)
+    counts = {}
+    reqs = [_counted(i, counts, max_new_tokens=4) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    frontend = ServeFrontend(eng)
+    frontend._fail_open()                         # pump died mid-serve
+    frontend._fail_open()                         # double-fault: no re-fire
+    assert all(r.done and r.truncated for r in reqs)
+    assert counts == {0: 1, 1: 1}
+
+
+def test_wave_engine_fires_finish_once(dense):
+    cfg, params = dense
+    eng = WaveServeEngine(cfg, params, slots=2, max_len=32)
+    counts = {}
+    reqs = [_counted(0, counts, max_new_tokens=2),
+            _counted(1, counts, max_new_tokens=500)]   # hits max_len: trunc
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert reqs[0].status == "completed"
+    assert reqs[1].truncated
+    assert counts == {0: 1, 1: 1}

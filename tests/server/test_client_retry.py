@@ -1,0 +1,165 @@
+"""Client retry machinery (repro.server.client) against a scripted fake
+server — no engine, no jax: seeded-jitter determinism, the exponential
+backoff schedule, Retry-After precedence, transport-error retries, and
+retry exhaustion."""
+
+import asyncio
+import json
+
+import pytest
+
+from repro.server.client import (RETRYABLE_ERRORS, RetryPolicy,
+                                 stream_generate)
+from repro.server.frontend import _json_response, _unavailable
+
+
+def _ok_stream(tokens, summary):
+    """A 200 chunked NDJSON response in the frontend's wire format."""
+    lines = [json.dumps({"token": t}) for t in tokens] + [json.dumps(summary)]
+    body = b"".join(
+        f"{len(line) + 1:x}\r\n".encode() + (line + "\n").encode() + b"\r\n"
+        for line in lines) + b"0\r\n\r\n"
+    return (b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n"
+            b"Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n" + body)
+
+
+OK = _ok_stream([5, 6], {"done": True, "status": "completed", "n_tokens": 2})
+SHED = _unavailable({"error": "overloaded", "status": "shed"})
+PLAIN_503 = _json_response(503, {"error": "overloaded", "status": "shed"})
+
+
+class _FakeServer:
+    """One scripted raw response per connection; ``None`` aborts the
+    connection before answering (a retryable transport error)."""
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.hits = 0
+        self._server = None
+        self.addr = None
+
+    async def _handle(self, reader, writer):
+        head = await reader.readuntil(b"\r\n\r\n")
+        for line in head.split(b"\r\n"):          # drain the request body
+            if line.lower().startswith(b"content-length:"):
+                await reader.readexactly(int(line.split(b":")[1]))
+        resp = self.script[min(self.hits, len(self.script) - 1)]
+        self.hits += 1
+        if resp is None:
+            writer.transport.abort()
+            return
+        writer.write(resp)
+        await writer.drain()
+        writer.close()
+
+    async def __aenter__(self):
+        self._server = await asyncio.start_server(self._handle,
+                                                  "127.0.0.1", 0)
+        self.addr = self._server.sockets[0].getsockname()[:2]
+        return self
+
+    async def __aexit__(self, *exc):
+        self._server.close()
+        await self._server.wait_closed()
+
+
+def _run(script, **kw):
+    sleeps = []
+
+    async def fake_sleep(s):
+        sleeps.append(s)
+
+    async def go():
+        async with _FakeServer(script) as srv:
+            res = await stream_generate(*srv.addr, [3, 4], max_new_tokens=2,
+                                        sleep=fake_sleep, **kw)
+            return res, srv.hits
+
+    res, hits = asyncio.run(go())
+    return res, hits, sleeps
+
+
+# ---- RetryPolicy unit behaviour ---------------------------------------------
+
+
+def test_seeded_jitter_is_deterministic_per_policy():
+    seq = [RetryPolicy(seed=42).delay_s(k) for k in range(4)]
+    assert seq == [RetryPolicy(seed=42).delay_s(k) for k in range(4)]
+    assert seq != [RetryPolicy(seed=43).delay_s(k) for k in range(4)]
+
+
+def test_backoff_schedule_is_exponential_within_jitter():
+    p = RetryPolicy(backoff_s=0.05, multiplier=2.0, jitter=0.1, seed=7)
+    for k in range(4):
+        lo, hi = 0.05 * 2 ** k * 0.9, 0.05 * 2 ** k * 1.1
+        assert lo <= p.delay_s(k) <= hi
+
+
+def test_retry_after_takes_precedence_when_longer():
+    p = RetryPolicy(backoff_s=0.05, seed=0)
+    assert p.delay_s(0, retry_after_s=9.0) == 9.0
+    # ...but a SHORTER Retry-After never truncates the computed backoff
+    assert p.delay_s(6, retry_after_s=0.001) > 1.0
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.5)
+
+
+# ---- stream_generate retry loop ---------------------------------------------
+
+
+def test_503s_retried_until_success_honouring_retry_after():
+    res, hits, sleeps = _run(
+        [SHED, SHED, OK],
+        retry=RetryPolicy(max_retries=3, backoff_s=0.01, seed=1))
+    assert res.ok and res.tokens == [5, 6]
+    assert res.attempts == 3 and hits == 3
+    # the frontend's Retry-After (1 s) dominates the 10 ms backoff
+    assert sleeps == [1.0, 1.0]
+
+
+def test_backoff_used_when_503_lacks_retry_after():
+    res, hits, sleeps = _run(
+        [PLAIN_503, PLAIN_503, PLAIN_503, OK],
+        retry=RetryPolicy(max_retries=5, backoff_s=0.05, multiplier=2.0,
+                          jitter=0.1, seed=9))
+    assert res.ok and res.attempts == 4
+    assert len(sleeps) == 3
+    for k, s in enumerate(sleeps):
+        assert 0.05 * 2 ** k * 0.9 <= s <= 0.05 * 2 ** k * 1.1
+
+
+def test_transport_errors_retried_then_succeed():
+    res, hits, sleeps = _run(
+        [None, None, OK], retry=RetryPolicy(max_retries=3, backoff_s=0.01,
+                                            seed=2))
+    assert res.ok and res.attempts == 3 and hits == 3
+    assert len(sleeps) == 2
+
+
+def test_transport_error_propagates_without_retry_policy():
+    async def go():
+        async with _FakeServer([None]) as srv:
+            await stream_generate(*srv.addr, [3], max_new_tokens=1)
+
+    with pytest.raises(RETRYABLE_ERRORS):
+        asyncio.run(go())
+
+
+def test_exhausted_retries_return_last_503():
+    res, hits, sleeps = _run(
+        [SHED], retry=RetryPolicy(max_retries=2, backoff_s=0.01, seed=3))
+    assert res.http_status == 503 and not res.ok
+    assert res.status == "shed"
+    assert res.attempts == 3 and hits == 3        # 1 try + 2 retries
+    assert res.headers.get("retry-after") == "1"
+
+
+def test_no_retry_by_default_on_503():
+    res, hits, sleeps = _run([SHED, OK])          # retry=None
+    assert res.http_status == 503
+    assert res.attempts == 1 and hits == 1 and sleeps == []
