@@ -14,13 +14,17 @@ when a single ``--only`` scenario is run.  ``--min-flow-speedup`` turns the
 beats the loop-reference sweep by at least that factor.
 ``--resilience-gate`` does the same for the ``resilience`` scenario: exit
 non-zero unless abft-guarded GEMMs show zero silent escapes and the chaos
-campaign is all-green.
+campaign is all-green.  ``--obs-overhead-gate PCT`` gates the ``obs``
+scenario (``BENCH_obs.json``): exit non-zero unless tracing overhead is
+below PCT% and two identical virtual-time runs render bit-identical
+metric snapshots.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 import time
@@ -751,6 +755,101 @@ def bench_resilience(fast: bool) -> List[Tuple[str, float, str]]:
     return rows
 
 
+def bench_obs(fast: bool) -> List[Tuple[str, float, str]]:
+    """Observability overhead + determinism (repro.obs): (a) the same
+    seeded workload served with full tracing/flight-recording
+    (``ObsBus(enabled=True)``) vs counters-only
+    (``ObsBus(enabled=False)``) — the marginal cost of the optional
+    instrumentation, min-of-repeats; (b) two identical virtual-time
+    ``LoadHarness`` replays must render bit-identical metric snapshots.
+    Writes BENCH_obs.json; ``--obs-overhead-gate`` pins (a) under a
+    percentage and (b) to True."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import model_api
+    from repro.obs import ObsBus
+    from repro.serve import Request, ServeEngine
+    from repro.server import (LoadHarness, TrafficConfig, TrafficGenerator,
+                              VirtualClock, overload_rate_rps)
+    cfg = get_config("starcoder2-3b", smoke=True)
+    params = model_api(cfg).init_params(jax.random.PRNGKey(0))
+    n_req = 6 if fast else 12
+    repeats = 3 if fast else 6
+    t_all = time.perf_counter()
+
+    def workload(rng):
+        return [Request(uid=uid,
+                        prompt=rng.integers(3, cfg.vocab_size,
+                                            int(rng.integers(1, 7))).tolist(),
+                        max_new_tokens=int(rng.integers(2, 8)))
+                for uid in range(n_req)]
+
+    def serve(enabled):
+        rng = np.random.default_rng(0)          # identical request sets
+        eng = ServeEngine(cfg, params, slots=2, max_len=48,
+                          obs=ObsBus(enabled=enabled))
+        for req in workload(rng):
+            eng.submit(req)
+        eng.run_until_drained()
+        return eng
+
+    # (a) marginal cost of tracing: warm both paths, then interleave the
+    # timed repeats and keep the minimum (least-noise estimator)
+    timings = {True: math.inf, False: math.inf}
+    for enabled in (True, False):
+        serve(enabled)                          # jit warmup / caches
+    eng_on = None
+    for _ in range(repeats):
+        for enabled in (True, False):
+            t0 = time.perf_counter()
+            eng = serve(enabled)
+            timings[enabled] = min(timings[enabled],
+                                   time.perf_counter() - t0)
+            if enabled:
+                eng_on = eng
+    overhead_pct = 100.0 * (timings[True] / max(timings[False], 1e-9) - 1.0)
+    rows = [
+        (f"obs/enabled_{n_req}req", timings[True] * 1e6,
+         f"trace_events={eng_on.obs.recorder.total_recorded}"),
+        (f"obs/disabled_{n_req}req", timings[False] * 1e6,
+         "trace_events=0"),
+        ("obs/overhead", 0.0, f"overhead={overhead_pct:.2f}%"),
+    ]
+
+    # (b) virtual-time determinism: identical replays, identical scrapes
+    def virtual_run():
+        clock = VirtualClock()
+        eng = ServeEngine(cfg, params, slots=2, max_len=32, clock=clock,
+                          policy="priority", max_pending=6,
+                          obs=ObsBus(clock=clock))
+        tcfg = TrafficConfig(
+            rate_rps=overload_rate_rps(2.0, 2, 0.02, TrafficConfig()),
+            duration_s=1.0, seed=0, max_prompt_len=8, max_gen_len=8,
+            vocab_size=cfg.vocab_size)
+        LoadHarness(eng, clock, step_cost_s=0.02).replay(
+            TrafficGenerator(tcfg).events())
+        return eng.obs.render_prometheus()
+
+    snap_a, snap_b = virtual_run(), virtual_run()
+    deterministic = snap_a == snap_b
+    rows.append(("obs/deterministic_snapshots", 0.0,
+                 f"bit_identical={deterministic}"))
+
+    payload = bench_payload(
+        "obs", time.perf_counter() - t_all,
+        {"arch": cfg.name, "requests": n_req, "slots": 2, "max_len": 48,
+         "repeats": repeats, "seed": 0},
+        enabled_s=timings[True], disabled_s=timings[False],
+        overhead_pct=overhead_pct,
+        trace_events=eng_on.obs.recorder.total_recorded,
+        metrics_exported=len(eng_on.obs.registry.names()),
+        deterministic_snapshots=deterministic,
+        snapshot_lines=len(snap_a.splitlines()))
+    with open(_json_path("BENCH_obs.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+    return rows
+
+
 BENCHES: Dict[str, Callable] = {
     "analysis": bench_analysis,
     "tableII": bench_tableII,
@@ -767,6 +866,7 @@ BENCHES: Dict[str, Callable] = {
     "traffic": bench_traffic,
     "accuracy_voltage": bench_accuracy_voltage,
     "resilience": bench_resilience,
+    "obs": bench_obs,
 }
 
 
@@ -786,6 +886,11 @@ def main() -> None:
                     help="fail (exit 1) unless the resilience scenario shows "
                          "zero abft silent escapes and an all-green chaos "
                          "campaign")
+    ap.add_argument("--obs-overhead-gate", type=float, default=None,
+                    metavar="PCT",
+                    help="fail (exit 1) unless the obs scenario's tracing "
+                         "overhead is below PCT%% and virtual-time metric "
+                         "snapshots are bit-identical")
     args = ap.parse_args()
     if args.json_out and not args.only:
         ap.error("--json-out requires --only (it names a single artifact)")
@@ -797,6 +902,8 @@ def main() -> None:
         ap.error("--min-flow-speedup requires the flow scenario to run")
     if args.resilience_gate and "resilience" not in names:
         ap.error("--resilience-gate requires the resilience scenario to run")
+    if args.obs_overhead_gate is not None and "obs" not in names:
+        ap.error("--obs-overhead-gate requires the obs scenario to run")
     print("name,us_per_call,derived")
     for name in names:
         for row_name, us, derived in BENCHES[name](args.fast):
@@ -831,6 +938,20 @@ def main() -> None:
         print(f"resilience gate: abft_silent_escapes={escapes} (need 0), "
               f"campaign_ok={campaign_ok} -> {'PASS' if ok else 'FAIL'}",
               flush=True)
+        if not ok:
+            sys.exit(1)
+
+    if args.obs_overhead_gate is not None:
+        path = args.json_out if (args.json_out and args.only == "obs") \
+            else os.path.join(args.out_dir, "BENCH_obs.json")
+        with open(path) as f:
+            payload = json.load(f)
+        ok = (payload["overhead_pct"] < args.obs_overhead_gate
+              and payload["deterministic_snapshots"])
+        print(f"obs gate: overhead={payload['overhead_pct']:.2f}% "
+              f"(need < {args.obs_overhead_gate}), deterministic="
+              f"{payload['deterministic_snapshots']} -> "
+              f"{'PASS' if ok else 'FAIL'}", flush=True)
         if not ok:
             sys.exit(1)
 

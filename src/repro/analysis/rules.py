@@ -1,4 +1,4 @@
-"""Repo-specific invariant rules (RP001..RP007).
+"""Repo-specific invariant rules (RP001..RP008).
 
 Each rule pins a convention an earlier PR made load-bearing:
 
@@ -22,6 +22,11 @@ RP007     No swallowed exceptions in ``serve/``/``server/``/``hwloop/``
           (PR 8) — a bare ``except:`` or a pass-only ``except Exception:``
           hides pump deaths and silent-corruption escalation; the
           resilience contract requires faults to surface or be handled.
+RP008     No bare ``print()`` in ``serve``/``server``/``hwloop``/
+          ``resilience``/``obs`` (PR 9) — runtime output must flow through
+          the ``repro.obs`` event/metric path (or an explicit CLI sink) so
+          the flight recorder and ``/metrics`` see it; stray prints corrupt
+          NDJSON trace streams piped to stdout.
 ========  ====================================================================
 
 Rules are conservative by design: the RP001 einsum check only fires when an
@@ -428,7 +433,34 @@ RP007 = Rule(
 )
 
 
-RULES: Tuple[Rule, ...] = (RP001, RP002, RP003, RP004, RP005, RP006, RP007)
+def _check_rp008(ctx: RuleContext) -> List[Finding]:
+    rule = RP008
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Name) and node.func.id == "print":
+            out.append(_finding(
+                rule, ctx, node,
+                "bare `print()` bypasses the obs event/metric path — it is "
+                "invisible to the flight recorder and corrupts NDJSON trace "
+                "streams on stdout"))
+    return out
+
+
+RP008 = Rule(
+    code="RP008", name="bare-print",
+    scopes=("serve", "server", "hwloop", "resilience", "obs"),
+    fix_hint="emit through `obs.event(...)`/a registry metric, or return the "
+             "payload to the CLI layer (`repro.launch`) which owns stdout; "
+             "intentional CLI prints need `# lint: allow=RP008 <reason>`",
+    description="bare print() in serve/server/hwloop/resilience/obs",
+    check=_check_rp008,
+)
+
+
+RULES: Tuple[Rule, ...] = (RP001, RP002, RP003, RP004, RP005, RP006, RP007,
+                           RP008)
 
 
 def rule_codes() -> List[str]:

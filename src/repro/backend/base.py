@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.serialize import to_plain
+
 
 def ensure_host_callback_capacity() -> bool:
     """Single-core deadlock guard for the ``pure_callback`` serving path.
@@ -129,21 +131,10 @@ class BackendTelemetry:
                     zip(self.partition_flags, other.partition_flags)]
 
     def to_dict(self) -> Dict[str, Any]:
-        """Plain-JSON snapshot (every value a python scalar/list)."""
-        return {
-            "calls": int(self.calls), "macs": int(self.macs),
-            "flags": int(self.flags), "replays": int(self.replays),
-            "silent": int(self.silent), "energy_j": float(self.energy_j),
-            "rel_error": float(self.rel_error),
-            "partition_flags": (None if self.partition_flags is None
-                                else [bool(f) for f in self.partition_flags]),
-            "guard_checks": int(self.guard_checks),
-            "guard_detected": int(self.guard_detected),
-            "guard_corrected": int(self.guard_corrected),
-            "guard_retries": int(self.guard_retries),
-            "guard_heals": int(self.guard_heals),
-            "guard_uncorrected": int(self.guard_uncorrected),
-        }
+        """Plain-JSON snapshot via the one shared telemetry serializer
+        (``repro.obs.to_plain``) — field order pinned by the dataclass
+        declaration, numpy scalars coerced to python types."""
+        return to_plain(self)
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +191,20 @@ class MatmulBackend:
     def __init__(self) -> None:
         self.total = BackendTelemetry()
         self._pending = BackendTelemetry()
+        self._obs = None            # ObsBus, when a serve engine attaches
+        self._obs_cb_hist = None    # pure_callback round-trip histogram
+
+    def attach_obs(self, bus) -> None:
+        """Attach a ``repro.obs.ObsBus``: every host :meth:`matmul` entry
+        (the body of the ``pure_callback`` round-trip) is timed into a
+        ``backend_callback_seconds{backend=...}`` histogram.  The serve
+        engine attaches only its *outermost* backend, so wrapped inner
+        backends (``GuardedBackend.inner``) are never double-counted."""
+        self._obs = bus
+        self._obs_cb_hist = bus.registry.histogram(
+            "backend_callback_seconds",
+            "host-side service time of one backend GEMM callback (s)",
+            labels=("backend",)).labels(backend=self.name)
 
     # -- subclass hook --------------------------------------------------------
 
@@ -230,6 +235,7 @@ class MatmulBackend:
             raise ValueError(f"unknown precision {precision!r}; "
                              f"known: {PRECISIONS}")
         out_dtype = _out_dtype(a_np.dtype, b_np.dtype, precision)
+        t0 = self._obs.clock() if self._obs is not None else None
         if precision == "int8":
             qa, sa = quantize_sym_i8(a_np)
             qb, sb = quantize_sym_i8(b_np.T)          # per-column scales of b
@@ -245,6 +251,8 @@ class MatmulBackend:
         if not count_flags:
             tel = dataclasses.replace(tel, flags=0, partition_flags=None)
         self._record(tel)
+        if t0 is not None:
+            self._obs_cb_hist.observe(self._obs.clock() - t0)
         return out, tel
 
     # -- traced routing -------------------------------------------------------

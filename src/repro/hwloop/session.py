@@ -72,6 +72,7 @@ class HwLoopSession:
         self.steps = 0
         self.recalibrations = 0
         self.flag_history: List[np.ndarray] = []
+        self._obs = None   # ObsBus, when a serve engine attaches
 
     def _guarded(self, rails: np.ndarray) -> np.ndarray:
         return np.asarray(rails, dtype=np.float64) + self.rail_margin
@@ -117,6 +118,24 @@ class HwLoopSession:
         self.accel = accel
         accel.set_rails(self._guarded(np.asarray(self.watchdog.runtime_v)))
 
+    def attach_obs(self, bus) -> None:
+        """Attach a ``repro.obs.ObsBus``: recalibrations count into
+        ``hwloop_recalibrations_total``, live rail voltages export as
+        ``hwloop_rail_volts{partition=...}`` gauges, and every rail heal
+        emits a ``rail_heal`` trace event into the flight recorder."""
+        self._obs = bus
+        self._c_recal = bus.registry.counter(
+            "hwloop_recalibrations_total",
+            "watchdog-triggered mid-serve rail recalibrations")
+        self._g_rails = bus.registry.gauge(
+            "hwloop_rail_volts", "live per-partition rail voltage (V)",
+            labels=("partition",))
+        self._publish_rails()
+
+    def _publish_rails(self) -> None:
+        for p, v in enumerate(np.asarray(self.rails, dtype=np.float64)):
+            self._g_rails.set(float(v), partition=str(p))
+
     def observe_flags(self, flags, n_tokens: int = 0) -> bool:
         """Feed one serving step's observed per-partition Razor flags into
         the watchdog; returns True when a recalibration fired (fresh rails
@@ -135,6 +154,12 @@ class HwLoopSession:
         if recalibrated:
             self.recalibrations += 1
             self.accel.set_rails(self._guarded(np.asarray(report.runtime_v)))
+            if self._obs is not None:
+                self._c_recal.inc()
+                self._publish_rails()
+                self._obs.event(
+                    "rail_heal", step=self.steps,
+                    rails_v=[float(v) for v in np.asarray(self.rails)])
         self.steps += 1
         return recalibrated
 

@@ -50,6 +50,13 @@ Flags:
                                  deterministic virtual-time load harness
                                  instead of the built-in random workload
     --step-cost S                virtual seconds per model call for --trace
+    --metrics PATH               write a Prometheus-text snapshot of the
+                                 engine's repro.obs registry at exit (the
+                                 same exposition GET /metrics serves live
+                                 under --serve-http)
+    --trace-out PATH             stream every obs trace event (request
+                                 lifecycle, decode steps, guard/rail
+                                 events) to PATH as NDJSON
 """
 
 from __future__ import annotations
@@ -70,6 +77,21 @@ from ..models import model_api
 from ..serve import Request, ServeEngine, WaveServeEngine
 
 
+def _attach_obs_outputs(engine, args) -> None:
+    if args.trace_out:
+        engine.obs.attach_trace_file(args.trace_out)
+
+
+def _finish_obs_outputs(engine, args) -> None:
+    if args.metrics:
+        with open(args.metrics, "w") as f:
+            f.write(engine.obs.registry.render_prometheus())
+        print(f"wrote {args.metrics}")
+    if args.trace_out:
+        engine.obs.close_trace()
+        print(f"wrote {args.trace_out}")
+
+
 def _serve_http(engine, hostport: str) -> None:
     """Run the asyncio streaming frontend until interrupted, then drain."""
     import asyncio
@@ -82,7 +104,8 @@ def _serve_http(engine, hostport: str) -> None:
     async def run() -> None:
         bound = await frontend.start(host or "127.0.0.1", int(port))
         print(f"serving on http://{bound[0]}:{bound[1]} "
-              f"(POST /v1/generate, GET /healthz); Ctrl-C drains + exits")
+              f"(POST /v1/generate, GET /healthz /metrics /v1/stats); "
+              f"Ctrl-C drains + exits")
         try:
             await frontend.serve_forever()
         except asyncio.CancelledError:
@@ -109,6 +132,7 @@ def _replay_trace(args, cfg, params, engine_kw) -> None:
     engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                          clock=clock, policy=args.policy,
                          max_pending=args.max_pending, **engine_kw)
+    _attach_obs_outputs(engine, args)
     events = load_trace(args.trace)
     harness = LoadHarness(engine, clock, step_cost_s=args.step_cost)
     m = harness.replay(events)
@@ -130,6 +154,7 @@ def _replay_trace(args, cfg, params, engine_kw) -> None:
         with open(args.json_out, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json_out}")
+    _finish_obs_outputs(engine, args)
 
 
 def main() -> None:
@@ -163,6 +188,10 @@ def main() -> None:
     ap.add_argument("--trace", type=str, default=None, metavar="FILE")
     ap.add_argument("--step-cost", type=float, default=0.02,
                     help="virtual seconds per model call under --trace")
+    ap.add_argument("--metrics", type=str, default=None, metavar="PATH",
+                    help="write a Prometheus-text registry snapshot at exit")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="stream obs trace events to PATH as NDJSON")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -218,8 +247,10 @@ def main() -> None:
         engine_kw.update(policy=args.policy, max_pending=args.max_pending)
     engine = engine_cls(cfg, params, slots=args.slots, max_len=args.max_len,
                         **engine_kw)
+    _attach_obs_outputs(engine, args)
     if args.serve_http:
         _serve_http(engine, args.serve_http)
+        _finish_obs_outputs(engine, args)
         return
 
     rng = np.random.default_rng(args.seed)
@@ -272,6 +303,7 @@ def main() -> None:
         with open(args.json_out, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json_out}")
+    _finish_obs_outputs(engine, args)
 
 
 if __name__ == "__main__":

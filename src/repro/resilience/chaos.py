@@ -119,6 +119,7 @@ def _guarded_engine(session=None, corruption: str = "bitflip",
                     **engine_kw):
     """Continuous engine over a guarded emulated backend at nominal rails.
     Extra keywords go to the engine (``policy=``, ``max_pending=``, ...)."""
+    from ..obs import ObsBus
     from ..serve import ServeEngine
 
     cfg, params = _model()
@@ -128,9 +129,24 @@ def _guarded_engine(session=None, corruption: str = "bitflip",
     else:
         inner = EmulatedBackend.nominal(corruption=corruption)
     guard = GuardedBackend(inner, mode=guard_mode, policy=guard_policy)
+    # every chaos engine flies with a black box: the last 128 step/guard/
+    # heal events, dumped into the scenario's details when it turns red
+    engine_kw.setdefault("obs", ObsBus(recorder_capacity=128))
     eng = ServeEngine(cfg, params, slots=2, max_len=32, backend=guard,
                       **engine_kw)
     return eng, guard
+
+
+def _flight(eng, violations: List[str]) -> Dict[str, Any]:
+    """Failed scenarios ship the engine's flight-recorder ring in their
+    details, so a red campaign is diagnosable from the
+    ``BENCH_resilience.json`` CI artifact alone."""
+    if not violations:
+        return {}
+    recorder = getattr(getattr(eng, "obs", None), "recorder", None)
+    if recorder is None:
+        return {}
+    return {"flight_recorder": recorder.to_list()}
 
 
 @functools.lru_cache(maxsize=8)
@@ -243,6 +259,7 @@ def _scn_silent_burst(fast: bool, seed: int) -> ScenarioResult:
             "guard_heals": tel.guard_heals,
             "guard_uncorrected": tel.guard_uncorrected,
             "guard_step_events": len(stats.guard_step_events),
+            **_flight(eng, violations),
         })
 
 
@@ -298,6 +315,7 @@ def _scn_watchdog_delay(fast: bool, seed: int) -> ScenarioResult:
             "guard_detected": tel.guard_detected,
             "guard_heals": tel.guard_heals,
             "guard_uncorrected": tel.guard_uncorrected,
+            **_flight(eng, violations),
         })
 
 
@@ -373,6 +391,7 @@ def _scn_rail_droop(fast: bool, seed: int) -> ScenarioResult:
             "guard_detected": tel.guard_detected,
             "guard_heals": tel.guard_heals,
             "guard_uncorrected": tel.guard_uncorrected,
+            **_flight(eng, violations),
         })
 
 
@@ -462,6 +481,7 @@ def _scn_slow_decode(fast: bool, seed: int) -> ScenarioResult:
             "stall_s": stall_s,
             "slow_status": None if crashed else slow.http_status,
             "cancelled": health.get("cancelled"),
+            **_flight(eng, violations),
         })
 
 
@@ -536,6 +556,7 @@ def _scn_client_disconnect(fast: bool, seed: int) -> ScenarioResult:
             "crashed": crashed, "corrupted_streams": 0,
             "cancelled": health.get("cancelled"),
             "survivor_tokens": None if crashed else len(survivor.tokens),
+            **_flight(eng, violations),
         })
 
 
@@ -611,6 +632,7 @@ def _scn_overload_shed(fast: bool, seed: int) -> ScenarioResult:
             "requests": n_req, "shed": len(shed), "completed": len(done),
             "retry_attempts": None if retried is None else retried.attempts,
             "health_shed": health.get("shed"),
+            **_flight(eng, violations),
         })
 
 
@@ -663,5 +685,6 @@ if __name__ == "__main__":
     ns = ap.parse_args()
     only = ns.only.split(",") if ns.only else None
     report = run_campaign(fast=not ns.full, seed=ns.seed, only=only)
+    # lint: allow=RP008 CLI entry point owns stdout; the report IS the output
     print(json.dumps(report.to_dict(), indent=2))
     sys.exit(0 if report.ok else 1)

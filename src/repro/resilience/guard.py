@@ -56,7 +56,14 @@ POLICIES = ("fail_open", "fail_closed")
 
 class GuardError(RuntimeError):
     """Raised under ``policy="fail_closed"`` when the escalation ladder
-    cannot produce a verified product."""
+    cannot produce a verified product.
+
+    When an ``ObsBus`` is attached, :attr:`flight` carries the flight
+    recorder's ring (the last N step/guard/heal events, oldest first) so
+    catchers can dump an NDJSON post-mortem without reaching back into
+    the engine."""
+
+    flight: list = []
 
 
 @dataclasses.dataclass
@@ -120,6 +127,14 @@ class GuardedBackend(MatmulBackend):
         """Bind the hwloop session whose watchdog the heal path drives (the
         serve engine calls this when both guard and session are present)."""
         self.session = session
+
+    def _obs_event(self, name: str, **attrs) -> None:
+        """Guard escalation trace (no-op without an attached ObsBus).
+        Emitted only on detection-path rungs, so the verified hot path
+        pays nothing."""
+        if self._obs is not None:
+            self._obs.event(name, backend=self.inner.name, mode=self.mode,
+                            **attrs)
 
     def add_tokens(self, n: int) -> None:
         self.inner.add_tokens(n)
@@ -209,20 +224,24 @@ class GuardedBackend(MatmulBackend):
         if v.ok:
             return out64, tel
         tel.guard_detected += 1
+        self._obs_event("guard_detect", bad_rows=int(v.bad_rows.size),
+                        bad_cols=int(v.bad_cols.size))
 
         if self._try_correct(out64, v):
             tel.guard_checks += 1
             if self._verify(a64, b64, out64).ok:
                 tel.guard_corrected += 1
+                self._obs_event("guard_correct")
                 return out64, tel
 
         # rung 1: bounded re-execution (clears transient faults; a
         # deterministic undervolt fault reproduces and falls through)
-        for _ in range(self.max_retries):
+        for retry in range(self.max_retries):
             out_r, tel_r = self.inner._execute(a, b)
             tel.merge(tel_r)
             tel.calls -= 1              # one protocol call, several executions
             tel.guard_retries += 1
+            self._obs_event("guard_retry", attempt=retry + 1)
             out64 = np.asarray(out_r, dtype=np.float64).copy()
             tel.guard_checks += 1
             v = self._verify(a64, b64, out64)
@@ -232,11 +251,15 @@ class GuardedBackend(MatmulBackend):
                 tel.guard_checks += 1
                 if self._verify(a64, b64, out64).ok:
                     tel.guard_corrected += 1
+                    self._obs_event("guard_correct")
                     return out64, tel
 
         # rung 2: heal the rails, then one more execution at health
         if self.heal and self._heal_rails():
             tel.guard_heals += 1
+            self._obs_event("guard_heal",
+                            via="watchdog" if self.session is not None
+                            else "nominal")
             out_r, tel_r = self.inner._execute(a, b)
             tel.merge(tel_r)
             tel.calls -= 1
@@ -247,11 +270,17 @@ class GuardedBackend(MatmulBackend):
 
         # rung 3: policy
         tel.guard_uncorrected += 1
+        self._obs_event("guard_uncorrected", policy=self.policy)
         if self.policy == "fail_closed":
-            raise GuardError(
+            err = GuardError(
                 f"unverified product after {self.max_retries} retries "
                 f"(mode={self.mode}, heal={self.heal}, "
                 f"inner={self.inner.name})")
+            if self._obs is not None:
+                # hand the black box to the catcher: the flight recorder
+                # ring (ending in this escalation) rides on the exception
+                err.flight = self._obs.recorder.to_list()
+            raise err
         return out64, tel
 
     # -- telemetry ------------------------------------------------------------

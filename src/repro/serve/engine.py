@@ -40,12 +40,19 @@ the ``SlotScheduler``: priority tiers, TTFT-deadline shedding, and
 bounded-queue backpressure (``submit()`` then returns False for a shed
 request, and ``EngineStats.shed`` counts every drop).  The default
 (``policy="fifo"``, unbounded) is bit-compatible with the seed engine.
+
+Every engine owns a ``repro.obs.ObsBus`` sharing its clock:
+``EngineStats`` scalar counters are registry-backed views (one source of
+truth behind ``GET /metrics``), request lifecycle events
+(submit/admit/prefill/decode-step/guard/finish) flow through the tracer
+into the flight-recorder ring, and per-step backend telemetry lands as
+flag/replay/energy counters + rate gauges.  Pass ``obs=ObsBus(
+enabled=False)`` to disable tracing while keeping the stats registry.
 """
 
 from __future__ import annotations
 
 import collections
-import dataclasses
 import time
 from typing import Any, Callable, Deque, Dict, List, Optional
 
@@ -55,6 +62,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig, ShapeConfig
 from ..models import model_api
+from ..obs import ObsBus, to_plain
 from .scheduler import Request, SlotScheduler
 
 Pytree = Any
@@ -62,40 +70,79 @@ Pytree = Any
 BOS = 2
 
 
-@dataclasses.dataclass
+# scalar EngineStats fields and the registry counters that back them
+# (field -> (metric name, help)); declaration order pins to_dict()'s
+# legacy key order
+_STAT_COUNTERS = (
+    ("prefill_steps", "serve_prefill_steps_total",
+     "model calls spent absorbing prompts"),
+    ("decode_steps", "serve_decode_steps_total",
+     "batched one-token decode calls"),
+    ("waves", "serve_waves_total", "wave-engine waves formed"),
+    ("admitted", "serve_requests_admitted_total",
+     "requests admitted into a decode slot"),
+    ("completed", "serve_requests_completed_total",
+     "requests served their full max_new_tokens"),
+    ("truncated", "serve_requests_truncated_total",
+     "requests cut short by budget or max_len"),
+    ("unserved", "serve_requests_unserved_total",
+     "requests still queued at drain"),
+    ("shed", "serve_requests_shed_total",
+     "requests dropped by admission (bounded queue / deadline)"),
+    ("cancelled", "serve_requests_cancelled_total",
+     "requests abandoned by the caller (disconnect/timeout)"),
+    ("tokens_generated", "serve_tokens_generated_total",
+     "tokens emitted to callers"),
+)
+
+
 class EngineStats:
-    prefill_steps: int = 0           # model calls spent absorbing prompts
-    decode_steps: int = 0            # batched one-token decode calls
-    waves: int = 0                   # wave engine only
-    admitted: int = 0
-    completed: int = 0               # served the full max_new_tokens
-    truncated: int = 0               # cut short by budget or max_len
-    unserved: int = 0                # still queued at run_until_drained return
-    shed: int = 0                    # dropped by admission (queue/deadline)
-    cancelled: int = 0               # abandoned by the caller (disconnect)
-    tokens_generated: int = 0
-    slot_busy_steps: List[int] = dataclasses.field(default_factory=list)
-    ttft_s: List[float] = dataclasses.field(default_factory=list)
-    # hardware-in-the-loop emulation telemetry (continuous engine with a
-    # repro.hwloop session attached; empty/None otherwise): per decode step
-    # the per-partition Razor flags, plus the session's final summary
-    # (flag rates, rails, recalibrations, energy/token)
-    hwloop_step_flags: List[List[bool]] = dataclasses.field(
-        default_factory=list)
-    hwloop: Optional[Dict[str, Any]] = None
-    # execution-backend telemetry (continuous engine with a non-ideal
-    # repro.backend attached): the backend's name, per-decode-step
-    # per-partition Razor flags from the REAL model GEMMs, and the backend's
-    # lifetime summary (flags, replays, energy/token via its EnergyLedger)
-    backend: Optional[str] = None
-    backend_step_flags: List[List[bool]] = dataclasses.field(
-        default_factory=list)
-    backend_telemetry: Optional[Dict[str, Any]] = None
-    # ABFT guard events (GuardedBackend only): one entry per decode step on
-    # which the guard did anything — {"step": decode step index, plus the
-    # non-zero guard_* counters of that step's GEMMs}
-    guard_step_events: List[Dict[str, int]] = dataclasses.field(
-        default_factory=list)
+    """Engine telemetry, now a *view* over an ``ObsBus`` registry.
+
+    Scalar counters (``prefill_steps`` .. ``tokens_generated``) are
+    properties backed by registry counters — ``stats.completed += 1``
+    and a ``GET /metrics`` scrape read the same cell, so there is one
+    source of truth and nothing to double-count.  Aggregate fields
+    (per-slot occupancy lists, TTFT samples, hwloop/backend summaries)
+    stay plain attributes.  ``to_dict()`` is bit-compatible with the
+    pre-bus dataclass serialization (same keys, same order, same
+    values).
+    """
+
+    def __init__(self, slot_busy_steps: Optional[List[int]] = None,
+                 backend: Optional[str] = None, obs=None) -> None:
+        self.obs = obs if obs is not None else ObsBus()
+        reg = self.obs.registry
+        self._counters = {
+            field: reg.counter(metric, help)
+            for field, metric, help in _STAT_COUNTERS}
+        self._ttft_hist = reg.histogram(
+            "serve_ttft_seconds", "submit to first emitted token (s)")
+        self.slot_busy_steps: List[int] = list(slot_busy_steps or [])
+        self.ttft_s: List[float] = []
+        # hardware-in-the-loop emulation telemetry (continuous engine with
+        # a repro.hwloop session attached; empty/None otherwise): per
+        # decode step the per-partition Razor flags, plus the session's
+        # final summary (flag rates, rails, recalibrations, energy/token)
+        self.hwloop_step_flags: List[List[bool]] = []
+        self.hwloop: Optional[Dict[str, Any]] = None
+        # execution-backend telemetry (continuous engine with a non-ideal
+        # repro.backend attached): the backend's name, per-decode-step
+        # per-partition Razor flags from the REAL model GEMMs, and the
+        # backend's lifetime summary (flags, replays, energy/token)
+        self.backend: Optional[str] = backend
+        self.backend_step_flags: List[List[bool]] = []
+        self.backend_telemetry: Optional[Dict[str, Any]] = None
+        # ABFT guard events (GuardedBackend only): one entry per decode
+        # step on which the guard did anything — {"step": decode step
+        # index, plus the non-zero guard_* counters of that step's GEMMs}
+        self.guard_step_events: List[Dict[str, int]] = []
+
+    def record_ttft(self, ttft: float) -> None:
+        """One TTFT sample: keeps the raw list (bit-compatible to_dict)
+        and feeds the latency histogram behind ``/metrics``."""
+        self.ttft_s.append(ttft)
+        self._ttft_hist.observe(ttft)
 
     @property
     def model_steps(self) -> int:
@@ -108,12 +155,38 @@ class EngineStats:
         return [b / d for b in self.slot_busy_steps]
 
     def to_dict(self) -> Dict[str, Any]:
-        out = dataclasses.asdict(self)
-        out["model_steps"] = self.model_steps
-        out["occupancy"] = self.occupancy()
-        out["ttft_mean_s"] = (sum(self.ttft_s) / len(self.ttft_s)
-                              if self.ttft_s else None)
-        return out
+        out: Dict[str, Any] = {field: getattr(self, field)
+                               for field, _, _ in _STAT_COUNTERS}
+        out.update(
+            slot_busy_steps=self.slot_busy_steps,
+            ttft_s=self.ttft_s,
+            hwloop_step_flags=self.hwloop_step_flags,
+            hwloop=self.hwloop,
+            backend=self.backend,
+            backend_step_flags=self.backend_step_flags,
+            backend_telemetry=self.backend_telemetry,
+            guard_step_events=self.guard_step_events,
+            model_steps=self.model_steps,
+            occupancy=self.occupancy(),
+            ttft_mean_s=(sum(self.ttft_s) / len(self.ttft_s)
+                         if self.ttft_s else None),
+        )
+        return to_plain(out)
+
+
+def _counter_property(field: str) -> property:
+    def fget(self) -> int:
+        return int(self._counters[field].value())
+
+    def fset(self, value) -> None:
+        self._counters[field].set(float(value))
+
+    return property(fget, fset)
+
+
+for _field, _metric, _help in _STAT_COUNTERS:
+    setattr(EngineStats, _field, _counter_property(_field))
+del _field, _metric, _help
 
 
 class ServeEngine:
@@ -122,9 +195,14 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Pytree, slots: int = 4,
                  max_len: int = 128, hwloop=None, backend=None,
                  clock: Callable[[], float] = time.monotonic,
-                 policy: str = "fifo", max_pending: Optional[int] = None):
+                 policy: str = "fifo", max_pending: Optional[int] = None,
+                 obs: Optional[ObsBus] = None):
         self.cfg = cfg
         self._clock = clock
+        # one ObsBus per engine (never process-global: virtual-time runs
+        # must replay bit-identically), sharing the engine clock so
+        # latency histograms are deterministic under the load harness
+        self.obs = obs if obs is not None else ObsBus(clock=clock)
         # execution backend for ALL model GEMMs (a repro.backend name or
         # instance): "emulated" serves every decode matmul on the
         # fault-injecting voltage-scaled array with flag/energy telemetry
@@ -153,10 +231,47 @@ class ServeEngine:
                 # watchdog rather than jumping straight to nominal
                 backend.attach_session(hwloop)
         self.scheduler = SlotScheduler(slots, policy=policy,
-                                       max_pending=max_pending, clock=clock)
+                                       max_pending=max_pending, clock=clock,
+                                       obs=self.obs)
         self.stats = EngineStats(
             slot_busy_steps=[0] * slots,
-            backend=backend.name if backend is not None else None)
+            backend=backend.name if backend is not None else None,
+            obs=self.obs)
+        reg = self.obs.registry
+        self._g_queue_depth = reg.gauge(
+            "serve_queue_depth", "requests waiting for a decode slot")
+        self._g_active = reg.gauge(
+            "serve_active_slots", "slots serving a live request")
+        reg.gauge("serve_slots", "configured decode slots").set(slots)
+        self._h_queue_wait = reg.histogram(
+            "serve_queue_wait_seconds", "submit to slot admission (s)")
+        if backend is not None and hasattr(backend, "attach_obs"):
+            backend.attach_obs(self.obs)   # callback latency + guard events
+        if hwloop is not None and hasattr(hwloop, "attach_obs"):
+            hwloop.attach_obs(self.obs)    # recalibrations + rail gauges
+        if self._track_backend:
+            self._c_gemms = reg.counter(
+                "backend_gemm_calls_total", "backend matmul invocations")
+            self._c_macs = reg.counter(
+                "backend_macs_total", "multiply-accumulates executed")
+            self._c_flags = reg.counter(
+                "backend_flags_total", "Razor DETECTED flags raised")
+            self._c_replays = reg.counter(
+                "backend_replays_total", "partition-cycle replays")
+            self._c_energy = reg.counter(
+                "backend_energy_joules_total", "emulated array energy (J)")
+            self._g_flag_rate = reg.gauge(
+                "serve_flag_rate",
+                "lifetime flags per partition-step observation")
+            self._g_replay_rate = reg.gauge(
+                "serve_replay_rate", "lifetime replays per GEMM call")
+            self._g_energy_per_token = reg.gauge(
+                "serve_energy_per_token_joules",
+                "lifetime backend energy / tokens generated (J)")
+            self._c_guard = reg.counter(
+                "guard_events_total",
+                "ABFT guard escalation events by kind", labels=("kind",))
+            self._flag_slots = 0   # partition-step observations seen
         self._shape = ShapeConfig("serve", max_len, slots, "decode")
         self._sub_shape = ShapeConfig("serve", max_len, 1, "decode")
         self._state = self.api.make_decode_state(self._shape)
@@ -182,6 +297,12 @@ class ServeEngine:
         req.submit_t = self._clock()
         accepted = self.scheduler.submit(req)
         self.stats.shed = self.scheduler.n_shed
+        self._g_queue_depth.set(self.scheduler.n_pending)
+        self.obs.event("request_submitted", uid=req.uid,
+                       priority=getattr(req.priority, "name",
+                                        str(req.priority)),
+                       accepted=accepted,
+                       queue_depth=self.scheduler.n_pending)
         return accepted
 
     # for callers poking at the backlog (launchers, tests)
@@ -222,7 +343,7 @@ class ServeEngine:
         if req.first_token_t is None:
             req.first_token_t = self._clock()
             if req.submit_t is not None:
-                self.stats.ttft_s.append(req.first_token_t - req.submit_t)
+                self.stats.record_ttft(req.first_token_t - req.submit_t)
         self._cur[slot] = tok
         self.stats.tokens_generated += 1
         if req.on_token is not None:
@@ -235,6 +356,8 @@ class ServeEngine:
         terminal paths (e.g. cancelled by the client while the drain loop
         truncates it) still delivers ``on_finish`` exactly once."""
         req.finish_t = self._clock()
+        self.obs.event("request_finished", uid=req.uid, status=req.status,
+                       n_tokens=len(req.out_tokens))
         req.fire_finish()
 
     def _reap_cancelled(self) -> None:
@@ -297,7 +420,14 @@ class ServeEngine:
                     self.scheduler.evict(slot)
                     self._finished(req)
                     continue
-                logits, sub, n = self._absorb(req)
+                wait_s = (self._clock() - req.submit_t
+                          if req.submit_t is not None else 0.0)
+                self._h_queue_wait.observe(wait_s)
+                self.obs.event("request_admitted", uid=req.uid, slot=slot,
+                               queue_wait_s=wait_s)
+                with self.obs.span("prefill", uid=req.uid, slot=slot,
+                                   prompt_len=len(req.prompt)):
+                    logits, sub, n = self._absorb(req)
                 used += n
                 self.stats.prefill_steps += n
                 self.stats.admitted += 1
@@ -313,6 +443,27 @@ class ServeEngine:
                 break
         return used
 
+    def _publish_backend_step(self, tel, step_flags: List[bool]) -> None:
+        """Fold one decode step's backend telemetry into the registry:
+        cumulative counters plus the derived rate/energy gauges the
+        autoscaler (ROADMAP item 3) reads as control inputs."""
+        self._c_gemms.inc(max(float(tel.calls), 0.0))
+        self._c_macs.inc(max(float(tel.macs), 0.0))
+        self._c_flags.inc(max(float(tel.flags), 0.0))
+        self._c_replays.inc(max(float(tel.replays), 0.0))
+        self._c_energy.inc(max(float(tel.energy_j), 0.0))
+        self._flag_slots += len(step_flags)
+        if self._flag_slots:
+            self._g_flag_rate.set(
+                self._c_flags.value() / self._flag_slots)
+        calls = self._c_gemms.value()
+        if calls:
+            self._g_replay_rate.set(self._c_replays.value() / calls)
+        tokens = self.stats.tokens_generated
+        if tokens:
+            self._g_energy_per_token.set(
+                self._c_energy.value() / tokens)
+
     def step(self, budget: int = 2 ** 31) -> int:
         """One engine iteration: admit into free slots, then one batched
         decode step.  Idle slots are fed BOS and skipped in argmax/token
@@ -327,6 +478,8 @@ class ServeEngine:
             # prefill GEMM telemetry stays in the backend totals but must not
             # pollute the next decode step's flag vector
             self.backend.pop_telemetry()
+        span = self.obs.span("decode_step", step=self.stats.decode_steps,
+                             active=len(self.scheduler.active))
         logits, self._state = self._step(self.params, self._state,
                                          jnp.asarray(self._cur[:, None]))
         self.stats.decode_steps += 1
@@ -345,6 +498,7 @@ class ServeEngine:
             step_flags = [bool(f) for f in (tel.partition_flags or [])]
             self.stats.backend_step_flags.append(step_flags)
             self.backend.add_tokens(len(step_tokens))
+            self._publish_backend_step(tel, step_flags)
             if self.backend.is_guarded:
                 ev = {k: int(getattr(tel, k)) for k in (
                     "guard_detected", "guard_corrected", "guard_retries",
@@ -353,6 +507,15 @@ class ServeEngine:
                 if ev:
                     self.stats.guard_step_events.append(
                         {"step": self.stats.decode_steps - 1, **ev})
+                    self.obs.event("guard_step",
+                                   step=self.stats.decode_steps - 1, **ev)
+                    for k, v in ev.items():
+                        self._c_guard.inc(v, kind=k[len("guard_"):])
+        span.set(tokens=len(step_tokens),
+                 flags=sum(step_flags) if step_flags else 0)
+        span.end()
+        self._g_queue_depth.set(self.scheduler.n_pending)
+        self._g_active.set(len(self.scheduler.active))
         if self.hwloop is not None and step_tokens:
             if self._hwloop_adapter:
                 # thin adapter: real GEMM flags -> watchdog -> rail heal
@@ -400,15 +563,17 @@ class WaveServeEngine:
 
     def __init__(self, cfg: ModelConfig, params: Pytree, slots: int = 4,
                  max_len: int = 128,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 obs: Optional[ObsBus] = None):
         self.cfg = cfg
         self._clock = clock
+        self.obs = obs if obs is not None else ObsBus(clock=clock)
         self.api = model_api(cfg)
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.queue: Deque[Request] = collections.deque()   # O(1) pops
-        self.stats = EngineStats(slot_busy_steps=[0] * slots)
+        self.stats = EngineStats(slot_busy_steps=[0] * slots, obs=self.obs)
         self._shape = ShapeConfig("serve", max_len, slots, "decode")
         self._step = jax.jit(self.api.decode_step)
 
@@ -459,7 +624,7 @@ class WaveServeEngine:
                     if r.first_token_t is None:
                         r.first_token_t = self._clock()
                         if r.submit_t is not None:
-                            self.stats.ttft_s.append(
+                            self.stats.record_ttft(
                                 r.first_token_t - r.submit_t)
                     self.stats.tokens_generated += 1
                     if len(r.out_tokens) >= r.max_new_tokens:

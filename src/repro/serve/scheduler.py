@@ -126,7 +126,8 @@ class SlotScheduler:
 
     def __init__(self, slots: int, policy: str = "fifo",
                  max_pending: Optional[int] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 obs=None):
         if slots < 1:
             raise ValueError(f"need at least one slot, got {slots}")
         if policy not in self.POLICIES:
@@ -138,6 +139,7 @@ class SlotScheduler:
         self.policy = policy
         self.max_pending = max_pending
         self.clock = clock
+        self.obs = obs   # optional repro.obs.ObsBus (shed trace events)
         self.pending: Deque[Request] = collections.deque()
         self.active: Dict[int, Request] = {}
         self.shed_requests: List[Request] = []
@@ -188,6 +190,11 @@ class SlotScheduler:
         if self.clock is not None:
             req.finish_t = self.clock()
         self.shed_requests.append(req)
+        if self.obs is not None:
+            self.obs.event("request_shed", uid=req.uid, reason=reason,
+                           priority=getattr(req.priority, "name",
+                                            str(req.priority)),
+                           queue_depth=len(self.pending))
         req.fire_finish()
 
     def expire_deadlines(self) -> List[Request]:

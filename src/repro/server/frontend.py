@@ -24,6 +24,16 @@ Endpoints:
     Queue depth, shed/admission counters, and drain state as JSON — the
     load-balancer view of backpressure.
 
+``GET /metrics``
+    Prometheus text exposition of the engine's ``repro.obs`` registry
+    (TTFT/queue-wait histograms, queue depth, flag/replay rates,
+    energy/token, guard events).  Lock-free: a scrape never blocks the
+    pump thread and never touches jax.
+
+``GET /v1/stats``
+    The same registry as JSON, plus the full ``EngineStats`` view and
+    health payload — what the PR-10 autoscaler polls.
+
 Overload behaviour is the scheduler's: with ``ServeEngine(policy="priority",
 max_pending=N)`` a full queue sheds (HTTP 503 with shed telemetry) rather
 than buffering unboundedly, and expired TTFT SLOs shed queued requests
@@ -65,6 +75,19 @@ def _unavailable(obj: Dict[str, Any]) -> bytes:
     """503 with the backpressure header every shed/overload path shares."""
     return _json_response(503, obj,
                           headers={"Retry-After": str(RETRY_AFTER_S)})
+
+
+def _text_response(status: int, text: str,
+                   content_type: str = "text/plain; charset=utf-8") -> bytes:
+    body = text.encode()
+    return (f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}\r\n"
+            f"Content-Type: {content_type}\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n").encode() + body
+
+
+#: Content type of the Prometheus text exposition format.
+PROMETHEUS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
 
 class ServeFrontend:
@@ -189,6 +212,30 @@ class ServeFrontend:
             "backend": s.backend,
         }
 
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the engine's ObsBus registry.
+
+        Runs on the asyncio thread WITHOUT ``self._lock`` — racy read by
+        design, same as ``drain()``: registry cells are plain floats
+        behind the registry's own fine-grained lock (never held across a
+        jax call), so a scrape can never stall the pump mid-step."""
+        obs = getattr(self.engine, "obs", None)
+        if obs is None:
+            return ""
+        return obs.registry.render_prometheus()
+
+    def stats_json(self) -> Dict[str, Any]:
+        """JSON twin of ``/metrics``: health + the full EngineStats view +
+        the raw registry.  Lock-free for the same reason as
+        :meth:`metrics_text`; ``to_dict`` only reads python lists and
+        registry counters, never jax state."""
+        obs = getattr(self.engine, "obs", None)
+        return {
+            "health": self.health(),
+            "engine": self.engine.stats.to_dict(),
+            "metrics": obs.registry.render_json() if obs is not None else {},
+        }
+
     # ---- HTTP plumbing -------------------------------------------------------
 
     async def _handle(self, reader: asyncio.StreamReader,
@@ -197,6 +244,11 @@ class ServeFrontend:
             method, path, headers, body = await self._read_request(reader)
             if method == "GET" and path == "/healthz":
                 writer.write(_json_response(200, self.health()))
+            elif method == "GET" and path == "/metrics":
+                writer.write(_text_response(200, self.metrics_text(),
+                                            PROMETHEUS_CONTENT_TYPE))
+            elif method == "GET" and path == "/v1/stats":
+                writer.write(_json_response(200, self.stats_json()))
             elif method == "POST" and path == "/v1/generate":
                 await self._generate(writer, body)
             else:

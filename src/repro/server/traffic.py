@@ -213,6 +213,7 @@ def _main() -> None:
     save_trace(events, args.out)
     by_prio = {p.name: sum(1 for e in events if e.priority is p)
                for p in Priority}
+    # lint: allow=RP008 CLI entry point owns stdout; one-shot summary line
     print(f"wrote {len(events)} events over {args.duration}s to {args.out} "
           f"(priorities {by_prio})")
 

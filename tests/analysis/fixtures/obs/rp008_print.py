@@ -1,0 +1,5 @@
+"""RP008 fixture: a bare print() in the observability path."""
+
+
+def announce(event):
+    print("flag burst:", event)

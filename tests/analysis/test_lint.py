@@ -21,6 +21,7 @@ CASES = [
     ("common/rp005_mutable.py", "RP005"),
     ("kernels/rp006_blocks.py", "RP006"),
     ("serve/rp007_except.py", "RP007"),
+    ("obs/rp008_print.py", "RP008"),
 ]
 
 
@@ -93,7 +94,7 @@ def test_baseline_counts_duplicates(tmp_path):
 
 
 def test_rule_registry_complete():
-    assert rule_codes() == [f"RP00{i}" for i in range(1, 8)]
+    assert rule_codes() == [f"RP00{i}" for i in range(1, 9)]
     assert all(r.fix_hint and r.description for r in RULES)
 
 

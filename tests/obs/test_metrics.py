@@ -1,0 +1,148 @@
+"""MetricsRegistry primitives: bucket-edge semantics, label handling,
+get-or-create identity, and the deterministic Prometheus/JSON renders."""
+
+import math
+
+import pytest
+
+from repro.obs import DEFAULT_LATENCY_BUCKETS, MetricsRegistry
+
+
+# ---- counters / gauges -------------------------------------------------------
+
+def test_counter_inc_and_monotonicity():
+    reg = MetricsRegistry()
+    c = reg.counter("requests_total", "help text")
+    c.inc()
+    c.inc(2.5)
+    assert c.value() == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_counter_labels_are_independent_cells():
+    reg = MetricsRegistry()
+    c = reg.counter("events_total", labels=("kind",))
+    c.inc(kind="detect")
+    c.inc(3, kind="correct")
+    bound = c.labels(kind="detect")
+    bound.inc()
+    assert c.value(kind="detect") == 2
+    assert c.value(kind="correct") == 3
+    with pytest.raises(ValueError):
+        c.inc(wrong="x")          # unknown label name
+    with pytest.raises(ValueError):
+        c.inc()                   # missing label
+
+
+def test_gauge_set_inc_dec():
+    reg = MetricsRegistry()
+    g = reg.gauge("queue_depth")
+    g.set(4)
+    g.inc()
+    g.dec(2)
+    assert g.value() == 3
+    g.set(-1.5)                   # gauges may go negative
+    assert g.value() == -1.5
+
+
+# ---- histogram bucket edges --------------------------------------------------
+
+def test_histogram_bucket_edges_are_le_inclusive():
+    """An observation exactly on a bound lands in that bucket (Prometheus
+    `le` semantics), and the cumulative render reflects it."""
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(0.1, 1.0, 5.0))
+    for v in (0.1, 0.10000001, 1.0, 5.0, 7.0):
+        h.observe(v)
+    buckets, total, n = h.snapshot()
+    assert n == 5
+    assert total == pytest.approx(13.20000001)
+    cum = {bound: c for bound, c in buckets}
+    assert cum[0.1] == 1          # 0.1 is <= 0.1
+    assert cum[1.0] == 3          # + 0.10000001, 1.0
+    assert cum[5.0] == 4          # + 5.0 (edge-inclusive)
+    assert cum[math.inf] == 5     # + 7.0 overflows to +Inf only
+
+
+def test_histogram_auto_appends_inf_and_sorts_bounds():
+    reg = MetricsRegistry()
+    h = reg.histogram("h", buckets=(5.0, 0.5, 1.0))
+    assert h.buckets == (0.5, 1.0, 5.0, math.inf)
+    h2 = reg.histogram("h2", buckets=(1.0, math.inf))
+    assert h2.buckets == (1.0, math.inf)
+
+
+def test_histogram_render_is_cumulative_with_inf_sum_count():
+    reg = MetricsRegistry()
+    h = reg.histogram("ttft_seconds", "ttft", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 2.0):
+        h.observe(v)
+    text = reg.render_prometheus()
+    assert 'ttft_seconds_bucket{le="0.1"} 1' in text
+    assert 'ttft_seconds_bucket{le="1"} 2' in text
+    assert 'ttft_seconds_bucket{le="+Inf"} 3' in text
+    assert "ttft_seconds_sum 2.55" in text
+    assert "ttft_seconds_count 3" in text
+    assert "# TYPE ttft_seconds histogram" in text
+
+
+def test_default_latency_buckets_cover_harness_and_real_scales():
+    assert DEFAULT_LATENCY_BUCKETS[0] <= 0.001
+    assert DEFAULT_LATENCY_BUCKETS[-1] >= 10.0
+    assert list(DEFAULT_LATENCY_BUCKETS) == sorted(DEFAULT_LATENCY_BUCKETS)
+
+
+# ---- registry get-or-create --------------------------------------------------
+
+def test_get_or_create_returns_same_metric():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "first")
+    b = reg.counter("x_total", "second registration ignored")
+    assert a is b
+    a.inc()
+    assert b.value() == 1
+
+
+def test_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x_total")
+    with pytest.raises(ValueError):
+        reg.gauge("x_total")
+    reg.gauge("g", labels=("a",))
+    with pytest.raises(ValueError):
+        reg.gauge("g", labels=("b",))
+
+
+# ---- renderers ---------------------------------------------------------------
+
+def test_render_prometheus_sorted_and_escaped():
+    reg = MetricsRegistry()
+    reg.gauge("zz").set(1)
+    c = reg.counter("aa", "first metric", labels=("path",))
+    c.inc(path='say "hi"\\')
+    text = reg.render_prometheus()
+    assert text.index("# TYPE aa counter") < text.index("# TYPE zz gauge")
+    assert 'aa{path="say \\"hi\\"\\\\"} 1' in text
+    assert text.endswith("\n")
+    # integers render without a trailing .0 (Prometheus-conventional)
+    assert "zz 1\n" in text
+
+
+def test_render_json_mirrors_prometheus_data():
+    reg = MetricsRegistry()
+    reg.counter("c", "help").inc(2)
+    reg.histogram("h", buckets=(1.0,)).observe(0.5)
+    j = reg.render_json()
+    assert j["c"]["type"] == "counter"
+    assert j["c"]["values"] == [{"labels": {}, "value": 2.0}]
+    assert j["h"]["values"][0]["buckets"] == {"1": 1, "+Inf": 1}
+    assert j["h"]["values"][0]["count"] == 1
+
+
+def test_injected_clock_is_carried():
+    t = [0.0]
+    reg = MetricsRegistry(clock=lambda: t[0])
+    assert reg.clock() == 0.0
+    t[0] = 7.5
+    assert reg.clock() == 7.5

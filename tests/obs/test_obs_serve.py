@@ -1,0 +1,147 @@
+"""Observability over a live serving stack: bit-identical metric
+snapshots across two identical virtual-time runs, the EngineStats view
+agreeing with the registry it fronts, lifecycle events landing in the
+flight recorder, and concurrent ``/metrics`` scrapes while streams are
+in flight (the scrape path must never stall the pump)."""
+
+import asyncio
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_api
+from repro.obs import ObsBus
+from repro.serve import Request, ServeEngine
+from repro.server import (LoadHarness, ServeFrontend, TrafficConfig,
+                          TrafficGenerator, VirtualClock, get_json,
+                          overload_rate_rps, stream_generate)
+from repro.server.client import _request
+from repro.server.frontend import PROMETHEUS_CONTENT_TYPE
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("starcoder2-3b", smoke=True)
+    api = model_api(cfg)
+    return cfg, api.init_params(KEY)
+
+
+def _virtual_run(cfg, params, seed=0):
+    clock = VirtualClock()
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, clock=clock,
+                      policy="priority", max_pending=6,
+                      obs=ObsBus(clock=clock))
+    tcfg = TrafficConfig(
+        rate_rps=overload_rate_rps(2.0, 2, 0.02, TrafficConfig()),
+        duration_s=1.0, seed=seed, max_prompt_len=8, max_gen_len=8,
+        vocab_size=cfg.vocab_size)
+    events = TrafficGenerator(tcfg).events()
+    metrics = LoadHarness(eng, clock, step_cost_s=0.02).replay(events)
+    return eng, metrics
+
+
+# ---- determinism -------------------------------------------------------------
+
+def test_virtual_time_metrics_bit_identical_across_runs(dense):
+    """Two identical virtual-time replays must render byte-for-byte
+    identical metric snapshots — the property that lets CI diff scrapes."""
+    cfg, params = dense
+    eng_a, _ = _virtual_run(cfg, params)
+    eng_b, _ = _virtual_run(cfg, params)
+    text_a = eng_a.obs.render_prometheus()
+    assert text_a == eng_b.obs.render_prometheus()
+    assert eng_a.obs.render_json() == eng_b.obs.render_json()
+    # a different seed must actually change the snapshot (the check above
+    # is vacuous if the render ignores the run)
+    eng_c, _ = _virtual_run(cfg, params, seed=5)
+    assert text_a != eng_c.obs.render_prometheus()
+
+
+def test_stats_view_agrees_with_registry_and_scrape(dense):
+    cfg, params = dense
+    eng, metrics = _virtual_run(cfg, params)
+    reg = eng.obs.registry
+    stats = eng.stats
+    assert reg.counter("serve_tokens_generated_total").value() \
+        == stats.tokens_generated == metrics.tokens_generated
+    assert reg.counter("serve_requests_completed_total").value() \
+        == stats.completed
+    _, _, n = reg.histogram("serve_ttft_seconds").snapshot()
+    assert n == len(stats.ttft_s) > 0
+    text = eng.obs.render_prometheus()
+    assert f"serve_tokens_generated_total {stats.tokens_generated}" in text
+    assert f"serve_ttft_seconds_count {n}" in text
+    # the full-lifecycle gauges settled: nothing queued or active at drain
+    assert reg.gauge("serve_queue_depth").value() == 0
+    assert reg.gauge("serve_active_slots").value() == 0
+    assert reg.gauge("serve_slots").value() == 2
+
+
+def test_lifecycle_events_reach_flight_recorder(dense):
+    cfg, params = dense
+    clock = VirtualClock()
+    eng = ServeEngine(cfg, params, slots=1, max_len=16, clock=clock,
+                      obs=ObsBus(clock=clock))
+    eng.submit(Request(uid=0, prompt=[5, 6], max_new_tokens=2))
+    eng.run_until_drained()
+    names = [e["name"] for e in eng.obs.recorder.to_list()]
+    for expected in ("request_submitted", "request_admitted", "prefill",
+                     "decode_step", "request_finished"):
+        assert expected in names, f"missing {expected} in {names}"
+    # spans carry durations in virtual time
+    spans = [e for e in eng.obs.recorder.to_list() if e["kind"] == "span"]
+    assert spans and all("dur_s" in s for s in spans)
+
+
+# ---- live scrape during streaming --------------------------------------------
+
+def test_concurrent_metrics_scrapes_during_streaming(dense):
+    """`GET /metrics` and `/v1/stats` answered from the asyncio thread
+    while the pump decodes: scrapes return live counters and never block
+    the streams."""
+    cfg, params = dense
+
+    async def scenario():
+        engine = ServeEngine(cfg, params, slots=2, max_len=32,
+                             policy="priority")
+        frontend = ServeFrontend(engine)
+        host, port = await frontend.start()
+
+        async def scrape_loop(n=8):
+            seen = []
+            for _ in range(n):
+                status, headers, payload = await _request(
+                    host, port, "GET", "/metrics")
+                assert status == 200
+                assert headers["content-type"] == PROMETHEUS_CONTENT_TYPE
+                seen.append(payload.decode())
+                await asyncio.sleep(0.002)
+            return seen
+
+        streams = [stream_generate(host, port, [5 + i, 6], max_new_tokens=4)
+                   for i in range(4)]
+        results, scrapes_a, scrapes_b = await asyncio.gather(
+            asyncio.gather(*streams), scrape_loop(), scrape_loop())
+        stats = await get_json(host, port, "/v1/stats")
+        final = await _request(host, port, "GET", "/metrics")
+        await frontend.drain()
+        await frontend.close()
+        return results, scrapes_a + scrapes_b, stats, final[2].decode()
+
+    results, scrapes, stats, final_text = asyncio.run(scenario())
+    # every stream survived concurrent scraping with its full budget
+    assert all(r.ok and len(r.tokens) == 4 for r in results)
+    # every scrape was well-formed Prometheus text with the serve metrics
+    for text in scrapes:
+        assert "# TYPE serve_tokens_generated_total counter" in text
+    assert "serve_tokens_generated_total 16" in final_text
+    assert "serve_ttft_seconds_count 4" in final_text
+    # /v1/stats carries health + the bit-compatible stats dict + metrics
+    assert stats["_http_status"] == 200
+    assert stats["health"]["completed"] == 4
+    assert stats["engine"]["tokens_generated"] == 16
+    assert stats["metrics"]["serve_requests_completed_total"]["values"] \
+        == [{"labels": {}, "value": 4.0}]

@@ -1,0 +1,110 @@
+"""The shared telemetry serializer and the schema pins that keep
+``EngineStats.to_dict`` / ``BackendTelemetry.to_dict`` bit-compatible
+with their pre-obs-bus shapes (consumers: BENCH_* artifacts, /v1/stats,
+the chaos report)."""
+
+import dataclasses
+import enum
+import json
+
+import numpy as np
+import pytest
+
+from repro.backend.base import BackendTelemetry
+from repro.obs import to_plain
+from repro.serve.engine import EngineStats
+
+
+# ---- to_plain coercions ------------------------------------------------------
+
+def test_passthrough_types():
+    for v in (None, True, 3, 2.5, "s"):
+        assert to_plain(v) is v or to_plain(v) == v
+
+
+def test_numpy_scalars_and_arrays():
+    assert to_plain(np.float64(2.5)) == 2.5
+    assert type(to_plain(np.float64(2.5))) is float
+    assert to_plain(np.int32(7)) == 7
+    assert type(to_plain(np.int32(7))) is int
+    assert to_plain(np.bool_(True)) is True
+    assert to_plain(np.array([1, 2])) == [1, 2]
+    assert to_plain(np.array([[True, False]])) == [[True, False]]
+    assert to_plain(np.array(3.0)) == 3.0          # 0-d array
+
+
+def test_containers_enums_dataclasses():
+    class K(enum.Enum):
+        HIGH = 0
+
+    @dataclasses.dataclass
+    class D:
+        b: int
+        a: float
+
+    out = to_plain({"k": K.HIGH, "d": D(b=1, a=np.float64(0.5)),
+                    "t": (1, [np.int64(2)])})
+    assert out == {"k": "HIGH", "d": {"b": 1, "a": 0.5}, "t": [1, [2]]}
+    assert list(out["d"]) == ["b", "a"]            # declaration order kept
+    json.dumps(out)                                # fully JSON-serializable
+
+
+def test_unsupported_type_raises():
+    with pytest.raises(TypeError):
+        to_plain(object())
+
+
+# ---- schema pins -------------------------------------------------------------
+
+# The exact key order of the pre-bus dataclass serializations. A change
+# here is a breaking change for every stored BENCH_*.json / chaos
+# artifact; update deliberately, not accidentally.
+ENGINE_STATS_KEYS = (
+    "prefill_steps", "decode_steps", "waves", "admitted", "completed",
+    "truncated", "unserved", "shed", "cancelled", "tokens_generated",
+    "slot_busy_steps", "ttft_s", "hwloop_step_flags", "hwloop",
+    "backend", "backend_step_flags", "backend_telemetry",
+    "guard_step_events", "model_steps", "occupancy", "ttft_mean_s",
+)
+
+BACKEND_TELEMETRY_KEYS = (
+    "calls", "macs", "flags", "replays", "silent", "energy_j",
+    "rel_error", "partition_flags", "guard_checks", "guard_detected",
+    "guard_corrected", "guard_retries", "guard_heals",
+    "guard_uncorrected",
+)
+
+
+def test_engine_stats_to_dict_schema_pinned():
+    stats = EngineStats(slot_busy_steps=[3, 1])
+    stats.completed = 2
+    stats.decode_steps = 4
+    stats.record_ttft(0.25)
+    d = stats.to_dict()
+    assert tuple(d) == ENGINE_STATS_KEYS
+    assert d["completed"] == 2 and isinstance(d["completed"], int)
+    assert d["ttft_s"] == [0.25]
+    assert d["ttft_mean_s"] == 0.25
+    assert d["occupancy"] == [0.75, 0.25]
+    json.dumps(d)
+
+
+def test_backend_telemetry_to_dict_schema_pinned():
+    tel = BackendTelemetry(calls=3, macs=10, flags=1,
+                           partition_flags=[True, False],
+                           energy_j=np.float64(0.5))
+    d = tel.to_dict()
+    assert tuple(d) == BACKEND_TELEMETRY_KEYS
+    assert d["partition_flags"] == [True, False]
+    assert d["energy_j"] == 0.5 and type(d["energy_j"]) is float
+    json.dumps(d)
+
+
+def test_stat_counter_properties_support_both_assignment_and_increment():
+    stats = EngineStats()
+    stats.shed = 5           # absolute snapshot assignment (scheduler path)
+    stats.shed += 2          # increment (engine path)
+    assert stats.shed == 7
+    # the registry cell is the same source of truth the scrape reads
+    reg = stats.obs.registry
+    assert reg.counter("serve_requests_shed_total").value() == 7.0
