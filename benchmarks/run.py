@@ -7,8 +7,8 @@ cluster count, rel-error, ...).
         [--out-dir DIR] [--json-out PATH] [--min-flow-speedup X]
 
 JSON artifacts (``BENCH_serve.json``, ``BENCH_flow.json``,
-``BENCH_hwloop.json``, ``BENCH_traffic.json``, ``BENCH_resilience.json``)
-land in ``--out-dir`` (default: CWD); ``--json-out`` overrides the exact path
+``BENCH_hwloop.json``, ``BENCH_traffic.json``, ``BENCH_resilience.json``,
+``BENCH_railscale.json``) land in ``--out-dir`` (default: CWD); ``--json-out`` overrides the exact path
 when a single ``--only`` scenario is run.  ``--min-flow-speedup`` turns the
 ``flow`` scenario into a CI gate: exit non-zero unless the vectorized sweep
 beats the loop-reference sweep by at least that factor.
@@ -31,6 +31,12 @@ import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
+
+# single-core hosts deadlock the pure_callback serving path (see conftest);
+# arm the XLA thread-pool workaround before any scenario builds a CPU client
+from repro.backend import ensure_host_callback_capacity
+
+ensure_host_callback_capacity()
 
 #: Output routing for JSON artifacts, set by main() from --out-dir/--json-out.
 _OUT: Dict[str, Optional[str]] = {"dir": ".", "json_out": None}
@@ -850,6 +856,151 @@ def bench_obs(fast: bool) -> List[Tuple[str, float, str]]:
     return rows
 
 
+def bench_railscale(fast: bool) -> List[Tuple[str, float, str]]:
+    """Closed-loop energy-aware rail autoscaling (repro.railscale): the
+    same seeded traffic traces replayed in virtual time through (a) the
+    abft-guarded emulated array pinned at static nominal rails — clean
+    by construction (zero failure probability at V_nom), so its tokens
+    are the ground truth for the emulated arithmetic — and (b) the
+    closed loop: guarded emulated array + hwloop watchdog + threshold/
+    pid autoscaler over the flow-characterized operating-point ladder.
+    Headline (gated by ``--railscale-gate``): at 0.25x load the closed
+    loop's energy/token drops strictly below static nominal with zero
+    guard-uncorrected escapes and zero corrupted completions, and at
+    peak the closed loop's p99 TTFT matches static within the SLO.
+    Writes BENCH_railscale.json (scenarios x modes + the diurnal gauge
+    timeline)."""
+    import jax
+    from repro.backend import EmulatedBackend
+    from repro.configs import get_config
+    from repro.flow import ArtifactStore, FlowConfig
+    from repro.flow import run as flow_run
+    from repro.hwloop import HwLoopSession
+    from repro.models import model_api
+    from repro.railscale import Autoscaler, OperatingPointTable
+    from repro.resilience import GuardedBackend
+    from repro.serve import ServeEngine
+    from repro.server import (LoadHarness, TrafficConfig, TrafficGenerator,
+                              VirtualClock, overload_rate_rps)
+
+    mcfg = get_config("starcoder2-3b", smoke=True)
+    params = model_api(mcfg).init_params(jax.random.PRNGKey(0))
+    # a coarser virtual step than bench_traffic keeps the emulated
+    # pure_callback model-call count (the real wall-clock cost) bounded
+    slots, max_len, step_cost_s = 2, 32, 0.05
+    slo_ttft_s = 2.0
+    duration_s = 1.5 if fast else 3.0
+    fcfg = FlowConfig(array_n=8, tech="vtr-22nm", max_trials=8, seed=2021)
+    store = ArtifactStore()
+    report = flow_run(fcfg, store=store)
+    table = OperatingPointTable.characterize(
+        report, fcfg, n_levels=4, probe_steps=4 if fast else 8,
+        seed=fcfg.seed)
+    nominal = table.rails(0)   # static baseline == ladder level 0
+
+    base = dict(duration_s=duration_s, seed=0, max_prompt_len=8,
+                max_gen_len=8, vocab_size=mcfg.vocab_size)
+    scenarios = {
+        "low": dict(factor=0.25),
+        "peak": dict(factor=1.0),
+        "diurnal": dict(factor=1.0, diurnal_amplitude=0.9,
+                        diurnal_period_s=duration_s),
+    }
+    modes = ("static", "threshold") if fast else ("static", "threshold",
+                                                  "pid")
+
+    def run_mode(mode, events):
+        clock = VirtualClock()
+        kw: Dict[str, object] = {
+            "backend": GuardedBackend(
+                EmulatedBackend.from_flow(report, fcfg,
+                                          rails=nominal.copy()),
+                mode="abft", policy="fail_open")}
+        if mode != "static":
+            kw["hwloop"] = HwLoopSession(fcfg, probe_rows=8,
+                                         rail_margin=0.02, store=store)
+            # faster cadence than the serving default: the short virtual
+            # trace must leave room for a full descent to the floor
+            kw["autoscaler"] = Autoscaler(table, mode,
+                                          slo_ttft_s=slo_ttft_s,
+                                          start_level=0, decide_every=2,
+                                          dwell_steps=4)
+        eng = ServeEngine(mcfg, params, slots=slots, max_len=max_len,
+                          clock=clock, **kw)
+        harness = LoadHarness(eng, clock, step_cost_s=step_cost_s,
+                              sample_every_s=0.1)
+        m = harness.replay(events)
+        tokens = {r.uid: list(r.out_tokens) for r in harness.requests
+                  if r.done and not r.truncated and not r.shed}
+        bs = eng.backend.summary()
+        out = {"metrics": m.to_dict(), "tokens": tokens,
+               "samples": harness.samples,
+               "energy_per_token_j": bs.get("energy_per_token_j"),
+               "guard_uncorrected": int(bs.get("guard_uncorrected", 0)),
+               "flags": int(bs.get("flags", 0)),
+               "replays": int(bs.get("replays", 0))}
+        if eng.autoscaler is not None:
+            out["railscale"] = eng.autoscaler.summary()
+        return out
+
+    rows: List[Tuple[str, float, str]] = []
+    results: Dict[str, Dict] = {}
+    t_all = time.perf_counter()
+    for name, spec in scenarios.items():
+        spec = dict(spec)
+        factor = spec.pop("factor")
+        tcfg = TrafficConfig(
+            rate_rps=overload_rate_rps(factor, slots, step_cost_s,
+                                       TrafficConfig(**base)),
+            **base, **spec)
+        events = TrafficGenerator(tcfg).events()
+        reference: Dict[int, List[int]] = {}
+        per_mode: Dict[str, Dict] = {}
+        for mode in modes:
+            t0 = time.perf_counter()
+            res = run_mode(mode, events)
+            wall = time.perf_counter() - t0
+            # ground truth: the static-nominal run is fail-free by
+            # construction (same emulated arithmetic, zero failure
+            # probability at V_nom), so a closed-loop completion with
+            # different tokens means the guard let corruption through
+            if mode == "static":
+                reference = res.pop("tokens")
+                res["corrupted_completions"] = 0
+            else:
+                res["corrupted_completions"] = sum(
+                    1 for uid, toks in res.pop("tokens").items()
+                    if toks != reference.get(uid))
+            m = res["metrics"]
+            e = res["energy_per_token_j"]
+            rows.append((
+                f"railscale/{name}_{mode}", wall * 1e6,
+                f"energy_per_token={'n/a' if e is None else f'{e:.3e}'}"
+                f"_p99_ttft={m['ttft_p99_s'] if m['ttft_p99_s'] is None else round(m['ttft_p99_s'], 3)}"
+                f"_corrupted={res['corrupted_completions']}"
+                + (f"_level={res['railscale']['level']}"
+                   f"_transitions={res['railscale']['transitions']}"
+                   if "railscale" in res else "")))
+            per_mode[mode] = res
+        results[name] = {"factor": factor,
+                         "reference_completed": len(reference),
+                         "modes": per_mode}
+
+    payload = bench_payload(
+        "railscale", time.perf_counter() - t_all,
+        {"arch": mcfg.name, "slots": slots, "max_len": max_len,
+         "step_cost_s": step_cost_s, "seed": 0, "array_n": fcfg.array_n,
+         "tech": fcfg.tech, "slo_ttft_s": slo_ttft_s,
+         "duration_s": duration_s, "guard": "abft", "traffic": base},
+        table={"levels": len(table), "meta": table.meta,
+               "points": [p.to_dict() for p in table.points]},
+        modes=list(modes),
+        scenarios=results)
+    with open(_json_path("BENCH_railscale.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+    return rows
+
+
 BENCHES: Dict[str, Callable] = {
     "analysis": bench_analysis,
     "tableII": bench_tableII,
@@ -867,6 +1018,7 @@ BENCHES: Dict[str, Callable] = {
     "accuracy_voltage": bench_accuracy_voltage,
     "resilience": bench_resilience,
     "obs": bench_obs,
+    "railscale": bench_railscale,
 }
 
 
@@ -891,6 +1043,12 @@ def main() -> None:
                     help="fail (exit 1) unless the obs scenario's tracing "
                          "overhead is below PCT%% and virtual-time metric "
                          "snapshots are bit-identical")
+    ap.add_argument("--railscale-gate", action="store_true",
+                    help="fail (exit 1) unless the railscale scenario shows "
+                         "closed-loop energy/token at 0.25x load strictly "
+                         "below static nominal, zero guard-uncorrected "
+                         "escapes, zero corrupted completions, and peak p99 "
+                         "TTFT within the SLO and no worse than static")
     args = ap.parse_args()
     if args.json_out and not args.only:
         ap.error("--json-out requires --only (it names a single artifact)")
@@ -904,6 +1062,8 @@ def main() -> None:
         ap.error("--resilience-gate requires the resilience scenario to run")
     if args.obs_overhead_gate is not None and "obs" not in names:
         ap.error("--obs-overhead-gate requires the obs scenario to run")
+    if args.railscale_gate and "railscale" not in names:
+        ap.error("--railscale-gate requires the railscale scenario to run")
     print("name,us_per_call,derived")
     for name in names:
         for row_name, us, derived in BENCHES[name](args.fast):
@@ -938,6 +1098,50 @@ def main() -> None:
         print(f"resilience gate: abft_silent_escapes={escapes} (need 0), "
               f"campaign_ok={campaign_ok} -> {'PASS' if ok else 'FAIL'}",
               flush=True)
+        if not ok:
+            sys.exit(1)
+
+    if args.railscale_gate:
+        path = args.json_out if (args.json_out and args.only == "railscale") \
+            else os.path.join(args.out_dir, "BENCH_railscale.json")
+        with open(path) as f:
+            payload = json.load(f)
+        slo = payload["config"]["slo_ttft_s"]
+        closed_modes = [m for m in payload["modes"] if m != "static"]
+        checks: List[Tuple[str, bool]] = []
+        static_low = payload["scenarios"]["low"]["modes"]["static"]
+        static_peak = payload["scenarios"]["peak"]["modes"]["static"]
+        for mode in closed_modes:
+            low = payload["scenarios"]["low"]["modes"][mode]
+            peak = payload["scenarios"]["peak"]["modes"][mode]
+            checks.append((
+                f"{mode}: low-load energy/token "
+                f"{low['energy_per_token_j']:.3e} < static "
+                f"{static_low['energy_per_token_j']:.3e}",
+                low["energy_per_token_j"]
+                < static_low["energy_per_token_j"]))
+            checks.append((
+                f"{mode}: peak p99 TTFT {peak['metrics']['ttft_p99_s']:.3f}s"
+                f" <= SLO {slo}s and <= static "
+                f"{static_peak['metrics']['ttft_p99_s']:.3f}s",
+                peak["metrics"]["ttft_p99_s"] <= slo
+                and (peak["metrics"]["ttft_p99_s"]
+                     <= static_peak["metrics"]["ttft_p99_s"] + 1e-9)))
+            checks.append((
+                f"{mode}: closed loop actually undervolted at low load",
+                payload["scenarios"]["low"]["modes"][mode]["railscale"]
+                ["transitions"]["down"] > 0))
+        for name in payload["scenarios"]:
+            for mode, res in payload["scenarios"][name]["modes"].items():
+                checks.append((
+                    f"{name}/{mode}: zero guard-uncorrected + zero "
+                    f"corrupted completions",
+                    res["guard_uncorrected"] == 0
+                    and res["corrupted_completions"] == 0))
+        ok = all(c for _, c in checks)
+        for desc, c in checks:
+            print(f"railscale gate: {desc} -> {'PASS' if c else 'FAIL'}",
+                  flush=True)
         if not ok:
             sys.exit(1)
 

@@ -27,6 +27,11 @@ RP008     No bare ``print()`` in ``serve``/``server``/``hwloop``/
           the ``repro.obs`` event/metric path (or an explicit CLI sink) so
           the flight recorder and ``/metrics`` see it; stray prints corrupt
           NDJSON trace streams piped to stdout.
+RP009     Rail writes in ``railscale``/``serve`` go through
+          ``GuardbandClamp`` (PR 10) — a direct ``set_rails``/
+          ``set_partition_voltage`` call skips the envelope bound, dwell
+          timer, and max-step limit, so a policy bug can push a partition
+          below its calibrated floor or fight the watchdog's heals.
 ========  ====================================================================
 
 Rules are conservative by design: the RP001 einsum check only fires when an
@@ -459,8 +464,42 @@ RP008 = Rule(
 )
 
 
+# ---- RP009: rail writes bypassing the guardband clamp ----------------------
+
+_RAIL_SETTERS = {"set_rails", "set_partition_voltage"}
+
+
+def _check_rp009(ctx: RuleContext) -> List[Finding]:
+    rule = RP009
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _RAIL_SETTERS:
+            out.append(_finding(
+                rule, ctx, node,
+                f"direct `.{node.func.attr}()` skips the guardband clamp "
+                f"(envelope bound, dwell timer, max step) — the autoscaler "
+                f"and watchdog can end up fighting over the rails"))
+    return out
+
+
+RP009 = Rule(
+    code="RP009", name="unclamped-rail-write",
+    scopes=("railscale", "serve"),
+    fix_hint="actuate through repro.railscale.GuardbandClamp "
+             "(`clamp.apply(session, target_v, step)` / `clamp.snap`) so "
+             "every rail write is envelope-bounded, dwell-limited, and "
+             "step-limited; the clamp's own writes carry "
+             "`# lint: allow=RP009 <reason>`",
+    description="direct set_rails/set_partition_voltage in railscale/serve",
+    check=_check_rp009,
+)
+
+
 RULES: Tuple[Rule, ...] = (RP001, RP002, RP003, RP004, RP005, RP006, RP007,
-                           RP008)
+                           RP008, RP009)
 
 
 def rule_codes() -> List[str]:

@@ -38,6 +38,15 @@ def _add_config_flags(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--max-trials", type=int, default=None)
     ap.add_argument("--no-calibrate", action="store_true",
                     help="skip the Razor runtime-calibration stage")
+    ap.add_argument("--points-out", type=str, default=None, metavar="FILE",
+                    help="distill each report into a railscale operating-"
+                         "point table (nominal down to calibrated rails) "
+                         "and write the JSON ladder file here")
+    ap.add_argument("--points-levels", type=int, default=4,
+                    help="rungs per operating-point ladder (default 4)")
+    ap.add_argument("--points-probe-steps", type=int, default=6,
+                    help="probe matmuls per rung when characterizing "
+                         "energy/flag rates (default 6)")
 
 
 def _base_config(args: argparse.Namespace,
@@ -76,7 +85,25 @@ def _cmd_run(args: argparse.Namespace) -> int:
           f"runtime {rep.runtime_mw:.1f} mW ({rep.runtime_reduction_pct:.2f}%)")
     if args.emit_xdc:
         print(rep.xdc)
+    if args.points_out:
+        _write_points(args, [(cfg, rep)])
     return 0
+
+
+def _write_points(args: argparse.Namespace, runs) -> None:
+    """Distill (config, report) pairs into serialized operating-point
+    ladders — the ``repro.railscale`` policies load these instead of
+    rerunning the CAD flow."""
+    from ..railscale import OperatingPointTable, save_tables
+
+    tables = [OperatingPointTable.characterize(
+        rep, cfg, n_levels=args.points_levels,
+        probe_steps=args.points_probe_steps, seed=cfg.seed)
+        for cfg, rep in runs]
+    save_tables(args.points_out, tables)
+    print(f"# wrote {len(tables)} operating-point table"
+          f"{'s' if len(tables) != 1 else ''} "
+          f"({args.points_levels} levels each) -> {args.points_out}")
 
 
 def _cmd_sweep(args: argparse.Namespace) -> int:
@@ -91,6 +118,8 @@ def _cmd_sweep(args: argparse.Namespace) -> int:
     print(f"# best runtime reduction: {best['tech']} {best['algo']} "
           f"{best['array_n']}x{best['array_n']} "
           f"-> {best['runtime_reduction_pct']:.2f}%")
+    if args.points_out:
+        _write_points(args, list(zip(result.configs, result.reports)))
     return 0
 
 

@@ -87,12 +87,37 @@ class HwLoopSession:
     def rails(self) -> np.ndarray:
         return self.accel.rails
 
+    @property
+    def rail_envelope(self) -> tuple:
+        """``(floor_v, ceil_v)``: the tech node's physical rail band —
+        threshold voltage up to the top of the paper's scaling range.
+        Wider than the *calibrated* clean region on purpose: undervolt
+        experiments (and the railscale policies probing toward NTC) may
+        dip below the safe point — that is what the watchdog heals — but
+        never below V_th into electrically meaningless territory."""
+        node = self.config.node
+        return float(node.v_th), float(max(node.v_nom, node.v_min))
+
     def set_partition_voltage(self, partition: int, v: float) -> None:
         """Lower (or raise) one rail live — the undervolting experiment.  A
         rail below the partition's safe point raises its DETECTED rate and,
         after the watchdog's patience, triggers a mid-serve recalibration
-        that restores safe rails."""
-        self.accel.set_partition_voltage(partition, v)
+        that restores safe rails.
+
+        Hardened: non-finite voltages are rejected, the write is clamped
+        to the tech node's :attr:`rail_envelope`, and the
+        ``hwloop_rail_volts`` gauge republishes immediately so a manual
+        rail write can never leave the exported telemetry stale."""
+        v = float(v)
+        if not np.isfinite(v):
+            raise ValueError(f"non-finite rail voltage {v!r} for partition "
+                             f"{partition}")
+        if not 0 <= int(partition) < self.n_partitions:
+            raise IndexError(f"partition {partition} out of range "
+                             f"[0, {self.n_partitions})")
+        lo, hi = self.rail_envelope
+        self.accel.set_partition_voltage(int(partition), min(max(v, lo), hi))
+        self._publish_rails()
 
     # -- backend adapter -------------------------------------------------------
 
@@ -133,6 +158,8 @@ class HwLoopSession:
         self._publish_rails()
 
     def _publish_rails(self) -> None:
+        if self._obs is None:
+            return
         for p, v in enumerate(np.asarray(self.rails, dtype=np.float64)):
             self._g_rails.set(float(v), partition=str(p))
 

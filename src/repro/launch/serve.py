@@ -38,6 +38,21 @@ Flags:
     --guard-policy {fail_open,fail_closed}
                                  what an unverifiable product does: return
                                  with telemetry (open) or raise (closed)
+    --autoscale {static,threshold,pid}
+                                 closed-loop energy-aware rail policy
+                                 (repro.railscale).  "static" is today's
+                                 fixed-rail path, bit-identical; the live
+                                 policies need --backend emulated and attach
+                                 a hwloop session automatically, undervolt
+                                 toward the calibrated floor when load is
+                                 low, and boost toward nominal under queue /
+                                 flag / TTFT-SLO pressure
+    --autoscale-points FILE      load the operating-point ladder from a
+                                 ``flow --points-out`` JSON file instead of
+                                 characterizing it at startup
+    --slo-ttft S                 TTFT SLO (seconds) feeding the policy's
+                                 headroom signal
+    --autoscale-every N          decode steps per autoscaler decision
     --policy {fifo,priority}     scheduler admission policy; priority enables
                                  tiers + TTFT-deadline shedding
     --max-pending N              bounded admission queue (backpressure: a
@@ -151,6 +166,8 @@ def _replay_trace(args, cfg, params, engine_kw) -> None:
                    "slots": args.slots, "policy": args.policy,
                    "max_pending": args.max_pending,
                    "step_cost_s": args.step_cost, **m.to_dict()}
+        if engine.autoscaler is not None:
+            payload["railscale"] = engine.autoscaler.summary()
         with open(args.json_out, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json_out}")
@@ -181,6 +198,12 @@ def main() -> None:
     ap.add_argument("--hwloop", action="store_true")
     ap.add_argument("--hwloop-tech", default="vtr-22nm")
     ap.add_argument("--hwloop-array-n", type=int, default=8)
+    ap.add_argument("--autoscale", default="static",
+                    choices=("static", "threshold", "pid"))
+    ap.add_argument("--autoscale-points", type=str, default=None,
+                    metavar="FILE")
+    ap.add_argument("--slo-ttft", type=float, default=None, metavar="S")
+    ap.add_argument("--autoscale-every", type=int, default=4, metavar="N")
     ap.add_argument("--policy", choices=("fifo", "priority"), default="fifo")
     ap.add_argument("--max-pending", type=int, default=None)
     ap.add_argument("--serve-http", type=str, default=None,
@@ -208,6 +231,13 @@ def main() -> None:
                  "--max-pending require the continuous engine")
     if args.serve_http and args.trace:
         ap.error("--serve-http and --trace are mutually exclusive")
+    if args.autoscale != "static":
+        if args.engine != "continuous":
+            ap.error("--autoscale needs the continuous engine")
+        if args.backend != "emulated":
+            ap.error("--autoscale {threshold,pid} actuates the emulated "
+                     "array's rails; pass --backend emulated")
+        args.hwloop = True   # the session is the sanctioned actuation path
     if args.backend == "emulated" or args.hwloop:
         # only these two paths run the CAD flow; one artifact store shared
         # by the backend's flow run and the hwloop watchdog executes it once
@@ -215,12 +245,13 @@ def main() -> None:
         fcfg = FlowConfig(array_n=args.hwloop_array_n, tech=args.hwloop_tech,
                           max_trials=8, seed=2021)
         store = ArtifactStore()
+    report = None
     if args.backend == "emulated":
         # CAD flow -> calibrated rails -> the serving execution target
         from ..backend import EmulatedBackend
         from ..flow import run as flow_run
-        engine_kw["backend"] = EmulatedBackend.from_flow(
-            flow_run(fcfg, store=store), fcfg)
+        report = flow_run(fcfg, store=store)
+        engine_kw["backend"] = EmulatedBackend.from_flow(report, fcfg)
     elif args.backend == "simulated":
         from ..backend import get_backend
         engine_kw["backend"] = get_backend(
@@ -239,6 +270,18 @@ def main() -> None:
         from ..hwloop import HwLoopSession
         engine_kw["hwloop"] = HwLoopSession(fcfg, probe_rows=8,
                                             rail_margin=0.02, store=store)
+    if args.autoscale != "static":
+        from ..railscale import Autoscaler, OperatingPointTable
+        if args.autoscale_points:
+            table = OperatingPointTable.load(
+                args.autoscale_points, tech=args.hwloop_tech,
+                array_n=args.hwloop_array_n)
+        else:
+            table = OperatingPointTable.characterize(report, fcfg,
+                                                     seed=fcfg.seed)
+        engine_kw["autoscaler"] = Autoscaler(
+            table, args.autoscale, decide_every=args.autoscale_every,
+            slo_ttft_s=args.slo_ttft, start_level=0)
 
     if args.trace:
         _replay_trace(args, cfg, params, engine_kw)
@@ -294,6 +337,14 @@ def main() -> None:
               f"{hw['recalibrations']} recalibrations, "
               f"{'n/a' if e is None else f'{e:.3g}'} J/token "
               f"(replay rate {hw['replay_rate']:.2e})")
+    if stats.railscale:
+        rs = stats.railscale
+        rails = ", ".join(f"{v:.3f}" for v in rs.get("rails_v", []))
+        print(f"[railscale:{rs['policy']}] level {rs['level']}/"
+              f"{rs['levels'] - 1}, {rs['decisions']} decisions, "
+              f"transitions {rs['transitions']}, "
+              f"{rs['heal_preemptions']} heal preemptions, "
+              f"rails [{rails}]")
     if args.json_out:
         payload = {"arch": args.arch, "engine": args.engine,
                    "slots": args.slots, "max_len": args.max_len,

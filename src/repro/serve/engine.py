@@ -137,6 +137,10 @@ class EngineStats:
         # step on which the guard did anything — {"step": decode step
         # index, plus the non-zero guard_* counters of that step's GEMMs}
         self.guard_step_events: List[Dict[str, int]] = []
+        # closed-loop rail autoscaler summary (continuous engine with a
+        # repro.railscale.Autoscaler attached; None otherwise): policy,
+        # final ladder level/rails, transition + heal-preemption counts
+        self.railscale: Optional[Dict[str, Any]] = None
 
     def record_ttft(self, ttft: float) -> None:
         """One TTFT sample: keeps the raw list (bit-compatible to_dict)
@@ -166,6 +170,7 @@ class EngineStats:
             backend_step_flags=self.backend_step_flags,
             backend_telemetry=self.backend_telemetry,
             guard_step_events=self.guard_step_events,
+            railscale=self.railscale,
             model_steps=self.model_steps,
             occupancy=self.occupancy(),
             ttft_mean_s=(sum(self.ttft_s) / len(self.ttft_s)
@@ -196,7 +201,7 @@ class ServeEngine:
                  max_len: int = 128, hwloop=None, backend=None,
                  clock: Callable[[], float] = time.monotonic,
                  policy: str = "fifo", max_pending: Optional[int] = None,
-                 obs: Optional[ObsBus] = None):
+                 obs: Optional[ObsBus] = None, autoscaler=None):
         self.cfg = cfg
         self._clock = clock
         # one ObsBus per engine (never process-global: virtual-time runs
@@ -272,6 +277,15 @@ class ServeEngine:
                 "guard_events_total",
                 "ABFT guard escalation events by kind", labels=("kind",))
             self._flag_slots = 0   # partition-step observations seen
+        # optional repro.railscale.Autoscaler (duck-typed): closed-loop
+        # energy-aware rail control.  Attached last so it sees the fully
+        # wired ObsBus/hwloop; ticked once per decode step AFTER that
+        # step's telemetry (queue gauges, backend counters, hwloop
+        # flags/heals) has been published — its decisions read only the
+        # registry, so virtual-time runs stay bit-deterministic.
+        self.autoscaler = autoscaler
+        if autoscaler is not None:
+            autoscaler.attach(self)
         self._shape = ShapeConfig("serve", max_len, slots, "decode")
         self._sub_shape = ShapeConfig("serve", max_len, 1, "decode")
         self._state = self.api.make_decode_state(self._shape)
@@ -525,6 +539,8 @@ class ServeEngine:
                 tel = self.hwloop.step(step_tokens, n_tokens=len(step_tokens))
                 self.stats.hwloop_step_flags.append(
                     [bool(f) for f in np.asarray(tel.flags)])
+        if self.autoscaler is not None:
+            self.autoscaler.on_decode_step()
         return used
 
     def run_until_drained(self, max_steps: int = 10_000) -> EngineStats:
@@ -547,6 +563,8 @@ class ServeEngine:
             self.stats.hwloop = self.hwloop.summary()
         if self._track_backend:
             self.stats.backend_telemetry = self.backend.summary()
+        if self.autoscaler is not None:
+            self.stats.railscale = self.autoscaler.summary()
         return self.stats
 
 

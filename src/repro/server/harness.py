@@ -88,14 +88,24 @@ class LoadHarness:
     ``VirtualClock`` instance, or latency telemetry will mix time bases.
     """
 
+    #: default registry gauges captured by the sampling timeline — the
+    #: load/energy/rail signals a railscale closed-loop run is judged on
+    SAMPLE_GAUGES = ("serve_queue_depth", "serve_active_slots",
+                     "serve_energy_per_token_joules", "railscale_level")
+
     def __init__(self, engine, clock: VirtualClock,
                  step_cost_s: float = 0.02,
-                 wall_clock: Callable[[], float] = time.perf_counter):
+                 wall_clock: Callable[[], float] = time.perf_counter,
+                 sample_every_s: Optional[float] = None,
+                 sample_gauges: Sequence[str] = SAMPLE_GAUGES):
         if getattr(engine, "_clock", None) is not clock:
             raise ValueError("engine was not built with this harness clock; "
                              "pass ServeEngine(..., clock=clock)")
         if step_cost_s <= 0:
             raise ValueError(f"step_cost_s must be > 0, got {step_cost_s}")
+        if sample_every_s is not None and sample_every_s <= 0:
+            raise ValueError(f"sample_every_s must be > 0, "
+                             f"got {sample_every_s}")
         self.engine = engine
         self.clock = clock
         self.step_cost_s = step_cost_s
@@ -103,6 +113,14 @@ class LoadHarness:
         # injectable second clock so tests can pin it too
         self.wall_clock = wall_clock
         self.requests: List[Request] = []
+        # opt-in virtual-time gauge timeline: every ``sample_every_s``
+        # virtual seconds one row of registry gauge values is appended to
+        # ``self.samples`` — the deterministic load/energy/level traces
+        # behind BENCH_railscale.json.  Default off (bit-identical replay).
+        self.sample_every_s = sample_every_s
+        self.sample_gauges = tuple(sample_gauges)
+        self.samples: List[Dict[str, float]] = []
+        self._next_sample_t = 0.0
 
     def replay(self, events: Sequence[TraceEvent],
                max_steps: int = 1_000_000) -> TrafficMetrics:
@@ -128,7 +146,21 @@ class LoadHarness:
             # iteration (nothing admissible ran) still advances one tick so
             # queued deadlines keep aging and the loop cannot spin
             clock.advance(max(used, 1) * self.step_cost_s)
+            self._maybe_sample()
         return self._metrics(events, self.wall_clock() - wall0, steps)
+
+    def _maybe_sample(self) -> None:
+        if self.sample_every_s is None or self.clock.now < self._next_sample_t:
+            return
+        reg = self.engine.obs.registry
+        row: Dict[str, float] = {"t_s": float(self.clock.now)}
+        for name in self.sample_gauges:
+            # get-or-create: a gauge the engine never published reads 0.0
+            row[name] = float(reg.gauge(name).value())
+        self.samples.append(row)
+        # schedule strictly past ``now`` even when the clock idled/jumped
+        missed = (self.clock.now - self._next_sample_t) // self.sample_every_s
+        self._next_sample_t += (missed + 1) * self.sample_every_s
 
     def _metrics(self, events: Sequence[TraceEvent], wall_s: float,
                  steps: int) -> TrafficMetrics:

@@ -1,0 +1,6 @@
+"""RP009 fixture: a policy writing rails directly, skipping the clamp."""
+
+
+def undervolt(session, target_v):
+    session.set_rails(target_v)
+    return target_v

@@ -22,6 +22,7 @@ CASES = [
     ("kernels/rp006_blocks.py", "RP006"),
     ("serve/rp007_except.py", "RP007"),
     ("obs/rp008_print.py", "RP008"),
+    ("railscale/rp009_rails.py", "RP009"),
 ]
 
 
@@ -94,7 +95,7 @@ def test_baseline_counts_duplicates(tmp_path):
 
 
 def test_rule_registry_complete():
-    assert rule_codes() == [f"RP00{i}" for i in range(1, 9)]
+    assert rule_codes() == [f"RP00{i}" for i in range(1, 10)]
     assert all(r.fix_hint and r.description for r in RULES)
 
 

@@ -78,3 +78,41 @@ def test_step_telemetry_feeds_engine_shapes(session):
     assert tel.flags.shape == (session.n_partitions,)
     assert tel.detected_p.shape == (session.n_partitions,)
     assert session.accel.ledger.tokens == 3
+
+
+def test_set_partition_voltage_rejects_garbage(session):
+    for bad in (float("nan"), float("inf"), float("-inf")):
+        with pytest.raises(ValueError, match="non-finite"):
+            session.set_partition_voltage(0, bad)
+    for bad_p in (-1, session.n_partitions):
+        with pytest.raises(IndexError, match="out of range"):
+            session.set_partition_voltage(bad_p, 0.9)
+    # a rejected write leaves the rails untouched
+    before = session.rails.copy()
+    with pytest.raises(ValueError):
+        session.set_partition_voltage(0, float("nan"))
+    np.testing.assert_array_equal(session.rails, before)
+
+
+def test_set_partition_voltage_clamps_to_physical_envelope(session):
+    lo, hi = session.rail_envelope
+    node = session.config.node
+    assert lo == node.v_th and hi == max(node.v_nom, node.v_min)
+    session.set_partition_voltage(0, lo - 1.0)     # below threshold voltage
+    assert session.rails[0] == lo
+    session.set_partition_voltage(0, hi + 1.0)     # above the scaling range
+    assert session.rails[0] == hi
+    session.set_partition_voltage(0, 0.9)          # in-band writes unclamped
+    assert session.rails[0] == 0.9
+
+
+def test_manual_rail_write_republishes_gauges(session):
+    from repro.obs import ObsBus
+
+    bus = ObsBus()
+    session.attach_obs(bus)
+    gauge = bus.registry.gauge("hwloop_rail_volts", labels=("partition",))
+    assert gauge.value(partition="0") == session.rails[0]
+    session.set_partition_voltage(0, 0.91)
+    # the exported telemetry can never go stale after a manual write
+    assert gauge.value(partition="0") == pytest.approx(0.91)

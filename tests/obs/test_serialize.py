@@ -64,7 +64,8 @@ ENGINE_STATS_KEYS = (
     "truncated", "unserved", "shed", "cancelled", "tokens_generated",
     "slot_busy_steps", "ttft_s", "hwloop_step_flags", "hwloop",
     "backend", "backend_step_flags", "backend_telemetry",
-    "guard_step_events", "model_steps", "occupancy", "ttft_mean_s",
+    "guard_step_events", "railscale", "model_steps", "occupancy",
+    "ttft_mean_s",
 )
 
 BACKEND_TELEMETRY_KEYS = (

@@ -1,0 +1,22 @@
+"""Shared railscale fixtures: one cached CAD-flow report + its ladder."""
+
+import pytest
+
+from repro.flow import ArtifactStore, FlowConfig
+from repro.flow import run as flow_run
+from repro.railscale import OperatingPointTable
+
+FCFG = FlowConfig(array_n=8, tech="vtr-22nm", max_trials=8, seed=2021)
+
+
+@pytest.fixture(scope="session")
+def flow():
+    store = ArtifactStore()
+    return FCFG, flow_run(FCFG, store=store), store
+
+
+@pytest.fixture(scope="session")
+def table(flow):
+    fcfg, report, _ = flow
+    return OperatingPointTable.characterize(report, fcfg, n_levels=4,
+                                            probe_steps=4, seed=fcfg.seed)

@@ -1,0 +1,199 @@
+"""Autoscaler: wiring into ServeEngine, closed-loop descent, watchdog-heal
+coordination (heal preempts dwell, holdoff blocks re-undervolt, boosts
+stay allowed), and the static policy's bit-compatibility guarantee."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.flow import FlowConfig
+from repro.hwloop import HwLoopSession
+from repro.models import model_api
+from repro.obs import ObsBus
+from repro.railscale import Autoscaler, OperatingPoint, OperatingPointTable
+from repro.serve import Request, ServeEngine
+
+# same flow coordinates as the session-scoped fixtures in conftest.py
+FCFG = FlowConfig(array_n=8, tech="vtr-22nm", max_trials=8, seed=2021)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_config("starcoder2-3b", smoke=True)
+    api = model_api(cfg)
+    return cfg, api.init_params(jax.random.PRNGKey(0))
+
+
+def _session(store):
+    return HwLoopSession(FCFG, probe_rows=8, rail_margin=0.02, store=store)
+
+
+def _drain(cfg, params, session, auto, n_reqs=2, new_tokens=8):
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, hwloop=session,
+                      autoscaler=auto)
+    reqs = [Request(uid=i, prompt=[3 + i, 4 + i], max_new_tokens=new_tokens)
+            for i in range(n_reqs)]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    return eng, stats, [list(r.out_tokens) for r in reqs]
+
+
+class FakeEngine:
+    """Just enough engine surface for Autoscaler.attach in unit tests."""
+
+    def __init__(self, session):
+        self.hwloop = session
+        self.obs = ObsBus()
+
+
+# -- construction / wiring errors ---------------------------------------------
+
+
+def test_constructor_and_attach_validation(table, flow):
+    _, _, store = flow
+    with pytest.raises(ValueError, match="decide_every"):
+        Autoscaler(table, decide_every=0)
+    with pytest.raises(KeyError, match="unknown rail policy"):
+        Autoscaler(table, "warp-drive")
+
+    # non-static policies refuse to run without an actuation path
+    class NoLoop:
+        hwloop = None
+        obs = ObsBus()
+    with pytest.raises(ValueError, match="hwloop"):
+        Autoscaler(table, "threshold").attach(NoLoop())
+
+    # one autoscaler binds to exactly one engine
+    auto = Autoscaler(table, "threshold", start_level=0)
+    eng = FakeEngine(_session(store))
+    auto.attach(eng)
+    with pytest.raises(RuntimeError, match="already attached"):
+        auto.attach(eng)
+
+    # ladder width must match the device
+    narrow = OperatingPointTable([
+        OperatingPoint(0, [1.0, 1.0], 1e-8, 0.0, 0.0, 1.0),
+        OperatingPoint(1, [0.9, 0.9], 1e-8, 0.0, 0.0, 1.0)])
+    with pytest.raises(ValueError, match="partitions"):
+        Autoscaler(narrow, "threshold").attach(FakeEngine(_session(store)))
+
+
+# -- closed loop end to end ---------------------------------------------------
+
+
+def test_threshold_descends_and_saves_energy_vs_static_nominal(dense, flow,
+                                                               table):
+    cfg, params = dense
+    _, _, store = flow
+    nominal = table.rails(0)
+
+    # baseline: rails pinned at nominal for the whole run
+    s_static = _session(store)
+    for p in range(s_static.n_partitions):
+        s_static.set_partition_voltage(p, float(nominal[p]))
+    _, st_static, toks_static = _drain(cfg, params, s_static, None)
+
+    # closed loop: starts at nominal, idles down toward the floor
+    s_auto = _session(store)
+    auto = Autoscaler(table, "threshold", decide_every=1, dwell_steps=1,
+                      start_level=0)
+    eng, st_auto, toks_auto = _drain(cfg, params, s_auto, auto)
+
+    rs = st_auto.railscale
+    assert rs is not None and rs["policy"] == "threshold"
+    assert rs["transitions"]["down"] > 0
+    assert rs["level"] > 0
+    assert eng.obs.registry.gauge("railscale_level").value() == rs["level"]
+    # headline: undervolting at idle costs strictly less energy per token
+    assert (st_auto.hwloop["energy_per_token_j"]
+            < st_static.hwloop["energy_per_token_j"])
+    # and never perturbs decoding — the loop only touches rails
+    assert toks_auto == toks_static
+    # every decision window leaves a trace event in the flight recorder
+    events = [e for e in eng.obs.recorder.to_list()
+              if e["name"] == "railscale_decision"]
+    assert len(events) == rs["decisions"]
+    assert {e["action"] for e in events} & {"down", "hold"}
+
+
+def test_static_policy_is_a_bit_compatible_noop(dense, flow, table):
+    cfg, params = dense
+    _, _, store = flow
+
+    s_plain = _session(store)
+    rails_before = s_plain.rails.copy()
+    _, st_plain, toks_plain = _drain(cfg, params, s_plain, None)
+
+    s_static = _session(store)
+    auto = Autoscaler(table, "static", start_level=0)  # start_level ignored
+    _, st_auto, toks_auto = _drain(cfg, params, s_static, auto)
+
+    # rails untouched, outputs identical to running with no autoscaler
+    np.testing.assert_array_equal(s_static.rails, rails_before)
+    assert toks_auto == toks_plain
+    rs = st_auto.railscale
+    assert rs["transitions"] == {"up": 0, "down": 0}
+    assert rs["decisions"] == 0
+    # anchored at the level nearest the session's calibrated rails
+    assert rs["level"] == table.nearest_level(rails_before)
+
+
+# -- watchdog-heal coordination (satellite: heal preempts the policy) ---------
+
+
+def test_heal_preempts_dwell_and_holdoff_blocks_reundervolt(flow, table):
+    _, _, store = flow
+    session = HwLoopSession(FCFG, probe_rows=8, rail_margin=0.02,
+                            patience=2, store=store)
+    auto = Autoscaler(table, "threshold", decide_every=1, dwell_steps=4,
+                      heal_holdoff_steps=10, start_level=0)
+    auto.attach(FakeEngine(session))
+    np.testing.assert_allclose(session.rails, table.rails(0))
+
+    # force a watchdog heal: persistent flags on every partition
+    ones = np.ones(session.n_partitions, dtype=bool)
+    healed = False
+    for _ in range(8):
+        if session.observe_flags(ones):
+            healed = True
+            break
+    assert healed and session.recalibrations == 1
+    # the heal restored the guarded calibrated rails = the deepest rung
+    deepest = len(table) - 1
+
+    auto.on_decode_step()
+    assert auto._heal_preemptions == 1
+    assert auto.level == table.nearest_level(session.rails) == deepest
+    # the heal preempted any pending dwell window and started a fresh one
+    assert auto.clamp._last_transition_step == auto._steps
+
+    # during holdoff a BOOST toward nominal is still allowed (urgent,
+    # bypasses the heal's dwell): deep queue forces it
+    auto._g_queue.set(5.0)
+    rails_before = session.rails.copy()
+    auto.on_decode_step()
+    assert auto.level == deepest - 1
+    assert auto._transitions["up"] == 1
+    assert float(np.mean(session.rails)) > float(np.mean(rails_before))
+
+    # pressure clears -> the policy wants to undervolt again, but the
+    # just-healed device is inside the holdoff window: blocked
+    auto._g_queue.set(0.0)
+    rails_boosted = session.rails.copy()
+    auto.on_decode_step()
+    assert auto.level == deepest - 1                  # no re-undervolt
+    np.testing.assert_array_equal(session.rails, rails_boosted)
+    events = auto._obs.recorder.to_list()
+    assert [e["name"] for e in events][:1] == ["railscale_heal_preempt"]
+    assert events[-1]["action"] == "holdoff"
+
+    # once the holdoff (and dwell) expire, descent resumes
+    for _ in range(20):
+        auto.on_decode_step()
+        if auto.level == deepest:
+            break
+    assert auto.level == deepest
+    assert auto._transitions["down"] >= 1
+    assert auto._heal_preemptions == 1                # no further heals

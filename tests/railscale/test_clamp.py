@@ -1,0 +1,106 @@
+"""GuardbandClamp: the three safety properties every rail write crosses —
+envelope bound, max step per transition, dwell between transitions."""
+
+import numpy as np
+import pytest
+
+from repro.railscale import GuardbandClamp
+
+
+class FakeSession:
+    """Duck-typed rail target: records every per-partition write."""
+
+    def __init__(self, rails):
+        self._rails = np.asarray(rails, dtype=np.float64)
+        self.writes = []
+
+    @property
+    def rails(self):
+        return self._rails
+
+    def set_partition_voltage(self, p, v):
+        self._rails[int(p)] = float(v)
+        self.writes.append((int(p), float(v)))
+
+
+@pytest.fixture
+def clamp():
+    return GuardbandClamp([0.8, 0.8], [1.0, 1.0], max_step_v=0.05,
+                          dwell_steps=4)
+
+
+def test_ctor_validation():
+    with pytest.raises(ValueError, match="matching 1-D"):
+        GuardbandClamp([0.8], [1.0, 1.0])
+    with pytest.raises(ValueError, match="finite"):
+        GuardbandClamp([np.nan], [1.0])
+    with pytest.raises(ValueError, match="floor above ceiling"):
+        GuardbandClamp([1.1], [1.0])
+    with pytest.raises(ValueError, match="max_step_v"):
+        GuardbandClamp([0.8], [1.0], max_step_v=0.0)
+
+
+def test_clamp_rejects_nan_and_shape_mismatch(clamp):
+    with pytest.raises(ValueError, match="non-finite"):
+        clamp.clamp([np.nan, 0.9])
+    with pytest.raises(ValueError, match="non-finite"):
+        clamp.clamp([np.inf, 0.9])
+    with pytest.raises(ValueError, match="expected 2"):
+        clamp.clamp([0.9])
+
+
+def test_clamp_bounds_to_envelope(clamp):
+    np.testing.assert_allclose(clamp.clamp([0.5, 2.0]), [0.8, 1.0])
+    np.testing.assert_allclose(clamp.clamp([0.9, 0.95]), [0.9, 0.95])
+
+
+def test_apply_is_rate_limited_per_transition(clamp):
+    s = FakeSession([1.0, 1.0])
+    applied = clamp.apply(s, [0.8, 0.8], step=0)
+    # one transition moves at most max_step_v per rail
+    np.testing.assert_allclose(applied, [0.95, 0.95])
+    np.testing.assert_allclose(s.rails, [0.95, 0.95])
+
+
+def test_apply_respects_dwell_then_reopens(clamp):
+    s = FakeSession([1.0, 1.0])
+    assert clamp.apply(s, [0.8, 0.8], step=0) is not None
+    # dwell window blocks the next transition...
+    assert clamp.apply(s, [0.8, 0.8], step=2) is None
+    assert clamp.dwell_active(3)
+    np.testing.assert_allclose(s.rails, [0.95, 0.95])
+    # ...until dwell_steps have elapsed
+    assert not clamp.dwell_active(4)
+    np.testing.assert_allclose(clamp.apply(s, [0.8, 0.8], step=4),
+                               [0.90, 0.90])
+
+
+def test_urgent_boost_bypasses_dwell(clamp):
+    s = FakeSession([0.9, 0.9])
+    assert clamp.apply(s, [0.85, 0.85], step=0) is not None
+    assert clamp.apply(s, [1.0, 1.0], step=1) is None          # dwell holds
+    boosted = clamp.apply(s, [1.0, 1.0], step=1, urgent=True)  # boost doesn't
+    np.testing.assert_allclose(boosted, [0.90, 0.90])
+
+
+def test_apply_noop_at_target_returns_none(clamp):
+    s = FakeSession([0.9, 0.9])
+    assert clamp.apply(s, [0.9, 0.9], step=0) is None
+    assert s.writes == []
+    # a no-op does not start a dwell window
+    assert not clamp.dwell_active(1)
+
+
+def test_snap_jumps_whole_envelope_but_still_clamps(clamp):
+    s = FakeSession([1.0, 1.0])
+    np.testing.assert_allclose(clamp.snap(s, [0.7, 0.85]), [0.8, 0.85])
+    np.testing.assert_allclose(s.rails, [0.8, 0.85])
+
+
+def test_notify_heal_restarts_dwell(clamp):
+    s = FakeSession([1.0, 1.0])
+    assert not clamp.dwell_active(10)
+    clamp.notify_heal(10)
+    assert clamp.dwell_active(12)
+    assert clamp.apply(s, [0.8, 0.8], step=12) is None
+    assert not clamp.dwell_active(14)

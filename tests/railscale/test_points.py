@@ -1,0 +1,131 @@
+"""Operating-point table: characterization, validation, serialization,
+and the flow CLI's ``--points-out`` round trip."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.flow.__main__ import main as flow_main
+from repro.railscale import (OperatingPoint, OperatingPointTable, load_tables,
+                             save_tables)
+
+
+def _point(level, rails, **kw):
+    base = dict(energy_per_token_j=1e-8, flag_rate=0.0, replay_rate=0.0,
+                throughput_scale=1.0)
+    base.update(kw)
+    return OperatingPoint(level=level, rails_v=list(rails), **base)
+
+
+# -- construction invariants --------------------------------------------------
+
+
+def test_table_rejects_level_gaps_and_width_mismatch():
+    with pytest.raises(ValueError, match="0..n-1"):
+        OperatingPointTable([_point(0, [1.0]), _point(2, [0.9])])
+    with pytest.raises(ValueError, match="partition counts"):
+        OperatingPointTable([_point(0, [1.0, 1.0]), _point(1, [0.9])])
+    with pytest.raises(ValueError, match="at least one"):
+        OperatingPointTable([])
+
+
+def test_table_rejects_non_monotone_ladder():
+    with pytest.raises(ValueError, match="non-increasing"):
+        OperatingPointTable([_point(0, [0.9, 0.9]), _point(1, [1.0, 1.0])])
+
+
+def test_floor_ceil_nearest():
+    t = OperatingPointTable([_point(0, [1.0, 1.0]), _point(1, [0.9, 0.95]),
+                             _point(2, [0.8, 0.9])])
+    np.testing.assert_allclose(t.floor_v(), [0.8, 0.9])
+    np.testing.assert_allclose(t.ceil_v(), [1.0, 1.0])
+    assert t.nearest_level([1.0, 1.0]) == 0
+    assert t.nearest_level([0.79, 0.91]) == 2
+    assert t.nearest_level([0.91, 0.94]) == 1
+
+
+# -- characterization ---------------------------------------------------------
+
+
+def test_characterize_ladder_shape_and_energy(flow, table):
+    fcfg, report, _ = flow
+    assert len(table) == 4
+    assert table.n_partitions == len(report.runtime_v)
+    # level 0 is nominal rails; the deepest level is the calibrated rails
+    # plus the session guard margin (what a watchdog heal restores)
+    np.testing.assert_allclose(table.rails(0), fcfg.node.v_nom)
+    np.testing.assert_allclose(
+        table.rails(3), np.asarray(report.runtime_v) + 0.02, atol=1e-12)
+    # undervolting must pay off: deepest level strictly cheaper per token
+    energies = [p.energy_per_token_j for p in table.points]
+    assert energies[-1] < energies[0]
+    assert all(e > 0 for e in energies)
+    assert table.meta["tech"] == fcfg.tech
+    assert table.meta["array_n"] == fcfg.array_n
+
+
+def test_characterize_is_deterministic(flow, table):
+    fcfg, report, _ = flow
+    again = OperatingPointTable.characterize(report, fcfg, n_levels=4,
+                                             probe_steps=4, seed=fcfg.seed)
+    assert again.to_dict() == table.to_dict()
+
+
+def test_characterize_requires_calibrated_report(flow):
+    fcfg, report, _ = flow
+    uncal = dataclasses.replace(report, runtime_v=None)
+    with pytest.raises(ValueError, match="runtime_v"):
+        OperatingPointTable.characterize(uncal, fcfg)
+
+
+# -- serialization ------------------------------------------------------------
+
+
+def test_json_round_trip(tmp_path, table):
+    path = tmp_path / "points.json"
+    table.save(path)
+    loaded = OperatingPointTable.load(path)
+    assert loaded.to_dict() == table.to_dict()
+
+
+def test_multi_table_load_selectors(tmp_path):
+    a = OperatingPointTable([_point(0, [1.0]), _point(1, [0.9])],
+                            meta={"tech": "vtr-22nm", "array_n": 8})
+    b = OperatingPointTable([_point(0, [1.0]), _point(1, [0.85])],
+                            meta={"tech": "vivado-28nm", "array_n": 8})
+    path = tmp_path / "multi.json"
+    save_tables(path, [a, b])
+    assert len(load_tables(path)) == 2
+    got = OperatingPointTable.load(path, tech="vivado-28nm")
+    assert got.to_dict() == b.to_dict()
+    with pytest.raises(KeyError, match="no operating-point table"):
+        OperatingPointTable.load(path, tech="nope")
+    with pytest.raises(KeyError, match="2 tables match"):
+        OperatingPointTable.load(path, array_n=8)
+
+
+def test_load_rejects_unknown_version(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"version": 99, "tables": []}')
+    with pytest.raises(ValueError, match="version"):
+        load_tables(path)
+
+
+# -- flow CLI -----------------------------------------------------------------
+
+
+def test_flow_cli_points_out_round_trip(tmp_path, capsys, flow, table):
+    fcfg, _, _ = flow
+    out = tmp_path / "cli_points.json"
+    rc = flow_main(["run", "--array-n", str(fcfg.array_n),
+                    "--tech", fcfg.tech, "--seed", str(fcfg.seed),
+                    "--max-trials", str(fcfg.max_trials),
+                    "--points-out", str(out),
+                    "--points-probe-steps", "4"])
+    assert rc == 0
+    assert str(out) in capsys.readouterr().out
+    loaded = OperatingPointTable.load(out, tech=fcfg.tech,
+                                      array_n=fcfg.array_n)
+    # the CLI run characterizes the same flow coordinates -> same ladder
+    assert loaded.to_dict() == table.to_dict()

@@ -1,0 +1,94 @@
+"""Rail policies: pure (signals, level, table) -> level decision logic."""
+
+import pytest
+
+from repro.railscale import (PIDPolicy, RailSignals, StaticPolicy,
+                             ThresholdPolicy, get_policy)
+
+
+class FakeTable:
+    def __init__(self, n):
+        self.n = n
+
+    def __len__(self):
+        return self.n
+
+
+TABLE = FakeTable(4)
+
+
+def sig(queue=0.0, active=0.0, flags=0.0, headroom=None, step=0):
+    return RailSignals(step=step, queue_depth=queue, active_frac=active,
+                       flag_rate=flags, replay_rate=0.0,
+                       energy_per_token_j=None, ttft_headroom=headroom)
+
+
+def test_static_holds_any_level():
+    p = StaticPolicy()
+    for level in range(4):
+        assert p.decide(sig(queue=100.0, flags=1.0), level, TABLE) == level
+
+
+def test_threshold_boosts_on_any_pressure_signal():
+    p = ThresholdPolicy()
+    assert p.decide(sig(queue=2.0), 2, TABLE) == 1            # deep queue
+    assert p.decide(sig(flags=0.5), 2, TABLE) == 1            # flag burst
+    assert p.decide(sig(headroom=0.1), 2, TABLE) == 1         # SLO pressure
+    assert p.decide(sig(queue=5.0), 0, TABLE) == 0            # floor at nominal
+
+
+def test_threshold_descends_only_when_comfortably_idle():
+    p = ThresholdPolicy()
+    assert p.decide(sig(), 1, TABLE) == 2                     # fully idle
+    assert p.decide(sig(headroom=0.9), 1, TABLE) == 2         # wide headroom
+    assert p.decide(sig(), 3, TABLE) == 3                     # already deepest
+
+
+def test_threshold_hysteresis_gap_holds():
+    # between the bands: not pressured (queue <= high), not idle
+    # (queue > low) -> hold, never flap
+    p = ThresholdPolicy(queue_low=0.0, queue_high=2.0)
+    assert p.decide(sig(queue=1.0), 1, TABLE) == 1
+    # thin-but-not-critical headroom also holds (below 2x headroom_low)
+    assert p.decide(sig(headroom=0.4), 1, TABLE) == 1
+
+
+def test_threshold_rejects_crossed_bands():
+    with pytest.raises(ValueError, match="bands must not cross"):
+        ThresholdPolicy(queue_low=3.0, queue_high=1.0)
+
+
+def test_pid_converges_to_extremes():
+    p = PIDPolicy()
+    level = 0
+    for _ in range(8):                      # zero pressure -> deepest level
+        level = p.decide(sig(), level, TABLE)
+    assert level == len(TABLE) - 1
+    for _ in range(8):                      # sustained pressure -> nominal
+        level = p.decide(sig(queue=8.0, flags=0.5, headroom=0.0),
+                         level, TABLE)
+    assert level == 0
+
+
+def test_pid_integral_windup_is_clamped():
+    p = PIDPolicy(i_max=2.0)
+    for _ in range(100):
+        p.decide(sig(queue=100.0), 0, TABLE)
+    assert p._integral == 2.0
+    # and it unwinds when pressure clears
+    for _ in range(100):
+        p.decide(sig(), 0, TABLE)
+    assert p._integral == 0.0
+
+
+def test_get_policy_resolution():
+    assert get_policy("static").name == "static"
+    assert isinstance(get_policy("threshold", flag_high=0.5), ThresholdPolicy)
+    inst = PIDPolicy()
+    assert get_policy(inst) is inst
+    with pytest.raises(KeyError, match="unknown rail policy"):
+        get_policy("warp-drive")
+    with pytest.raises(TypeError, match="kwargs"):
+        get_policy(inst, kp=2.0)
+    with pytest.raises(TypeError, match="not a RailPolicy"):
+        get_policy(object())
